@@ -1,0 +1,54 @@
+"""Pallas-kernel microbenchmarks (interpret mode: correctness + shape sweep
+timings; real TPU numbers come from running the same entry points with
+``interpret=False``)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def gemv_sweep() -> Dict:
+    rows: List[Dict] = []
+    rng = jax.random.PRNGKey(0)
+    for (M, K) in ((256, 2048), (512, 8192), (1024, 8192)):
+        a = jax.random.normal(rng, (M, K), jnp.float32)
+        x = jax.random.normal(rng, (K, 1), jnp.float32)
+        t, y = _time(ops.gemv, a, x, bm=128, bk=512)
+        err = float(jnp.max(jnp.abs(y - ref.gemv_ref(a, x))))
+        rows.append({"M": M, "K": K, "us": t * 1e6, "max_err": err})
+    return {"rows": rows, "pass": all(r["max_err"] < 1e-3 for r in rows)}
+
+
+def decode_attention_sweep() -> Dict:
+    rows: List[Dict] = []
+    rng = jax.random.PRNGKey(1)
+    for (B, H, KV, D, S) in ((1, 8, 2, 64, 1024), (4, 8, 8, 64, 2048)):
+        q = jax.random.normal(rng, (B, H, D), jnp.float32)
+        k = jax.random.normal(rng, (B, S, KV, D), jnp.float32)
+        v = jax.random.normal(rng, (B, S, KV, D), jnp.float32)
+        t, o = _time(ops.decode_attention, q, k, v, jnp.int32(S - 3), bs=256)
+        err = float(jnp.max(jnp.abs(o - ref.decode_attention_ref(q, k, v, S - 3))))
+        rows.append({"B": B, "H": H, "S": S, "us": t * 1e6, "max_err": err})
+    return {"rows": rows, "pass": all(r["max_err"] < 1e-3 for r in rows)}
+
+
+def all_benches() -> Dict[str, Dict]:
+    return {"gemv": gemv_sweep(), "decode_attention": decode_attention_sweep()}

@@ -1,0 +1,219 @@
+"""Reproductions of the paper's experiments (Figures 6, 9, 10, 11, 1/2).
+
+Each function mirrors one figure/table and returns a dict of results plus a
+pass/fail comparison against the paper's claims.  ``benchmarks.run`` drives
+all of them and prints the CSV summary.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    EngineKind,
+    GaussianPerturb,
+    PeerDelayPerturb,
+    SimConfig,
+    SyncPolicy,
+    run_gemv_allreduce,
+)
+from repro.core.timeline import ascii_timeline, phase_totals
+
+SWEEP_US = list(range(0, 41, 5))  # the paper's 0..40 us wakeupTime sweep
+
+
+def _linfit_r2(xs, ys):
+    fit = np.polyfit(xs, ys, 1)
+    pred = np.polyval(fit, xs)
+    ss_res = float(((np.array(ys) - pred) ** 2).sum())
+    ss_tot = float(((np.array(ys) - np.mean(ys)) ** 2).sum())
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return float(fit[0]), float(fit[1]), r2
+
+
+# ---------------------------------------------------------------------------
+# Figure 6: spin-wait flag reads grow linearly with wakeupTime
+# ---------------------------------------------------------------------------
+
+
+def fig6_wakeup_sweep(engine=EngineKind.EVENT) -> Dict:
+    rows = []
+    for d_us in SWEEP_US:
+        cfg = SimConfig(sync=SyncPolicy.SPIN, engine=engine)
+        r = run_gemv_allreduce(cfg, d_us * 1000.0, collect_segments=False)
+        rows.append(
+            {"wakeup_us": d_us, "flag_reads": r.flag_reads,
+             "nonflag_reads": r.nonflag_reads}
+        )
+    slope, icpt, r2 = _linfit_r2(
+        [r["wakeup_us"] for r in rows], [r["flag_reads"] for r in rows]
+    )
+    nonflag = rows[0]["nonflag_reads"]
+    return {
+        "rows": rows,
+        "slope_per_us": slope,
+        "r2": r2,
+        "nonflag_reads": nonflag,
+        "pass_linear": r2 > 0.99 and slope > 0,
+        "pass_nonflag_66k": 60_000 <= nonflag <= 70_000,
+        "paper_claim": "flag reads increase linearly with wakeupTime; "
+                       "non-flag ~66K stable",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Figure 9: SyncMon bounds flag reads (paper: 728-788 across the sweep)
+# ---------------------------------------------------------------------------
+
+
+def fig9_syncmon(engine=EngineKind.EVENT) -> Dict:
+    rows = []
+    for i, d_us in enumerate(SWEEP_US):
+        cfg = SimConfig(sync=SyncPolicy.SYNCMON, engine=engine)
+        # calibrated 10 ns per-eGPU network jitter (EXPERIMENTS.md §SyncMon)
+        p = GaussianPerturb(seed=i * 7 + 1, write_sigma_ns=10.0)
+        r = run_gemv_allreduce(
+            cfg, d_us * 1000.0, perturb=p, collect_segments=False
+        )
+        rows.append(
+            {"wakeup_us": d_us, "flag_reads": r.flag_reads,
+             "nonflag_reads": r.nonflag_reads,
+             "monitor_wakes": r.monitor_stats.get("wakes", 0)}
+        )
+    reads = [r["flag_reads"] for r in rows]
+    nonflag = rows[0]["nonflag_reads"]
+    return {
+        "rows": rows,
+        "min_reads": min(reads),
+        "max_reads": max(reads),
+        "nonflag_reads": nonflag,
+        "pass_bounded": (max(reads) - min(reads)) < 200
+        and 700 <= min(reads)
+        and max(reads) <= 800,
+        "pass_nonflag_unchanged": 60_000 <= nonflag <= 70_000,
+        "paper_claim": "flag reads bounded 728-788 across all configurations; "
+                       "non-flag unchanged ~66K",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Figure 10: simulation wall time scales linearly with input dimension M
+# ---------------------------------------------------------------------------
+
+
+def fig10_scaling_m(engine=EngineKind.EVENT, repeats: int = 3) -> Dict:
+    rows = []
+    for M in (256, 512, 1024, 2048, 4096):
+        cfg = SimConfig(M=M, sync=SyncPolicy.SPIN, engine=engine)
+        times = []
+        for rep in range(repeats):
+            t0 = time.perf_counter()
+            run_gemv_allreduce(cfg, 10_000.0, collect_segments=False)
+            times.append(time.perf_counter() - t0)
+        rows.append({"M": M, "wall_s": float(np.median(times))})
+    slope, icpt, r2 = _linfit_r2(
+        [r["M"] for r in rows], [r["wall_s"] for r in rows]
+    )
+    return {
+        "rows": rows,
+        "r2": r2,
+        "pass_linear": r2 >= 0.76,  # the paper's own weakest trendline fit
+        "paper_claim": "sim time ~ linear in M (r^2 0.76-0.98)",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Figure 11: simulation time sub-linear in #eGPUs; fit t = t_1GPU + n*t_eGPU
+# ---------------------------------------------------------------------------
+
+
+def fig11_scaling_egpus(engine=EngineKind.EVENT, syncmon: bool = False) -> Dict:
+    counts = [3, 7, 15, 31, 63, 127, 255]
+    rows = []
+    for n in counts:
+        cfg = SimConfig(
+            n_egpus=n,
+            weak_scaling=True,  # per-device K slice held at K (paper's setup
+            # keeps per-GPU work fixed while eidolons are added)
+            K=2048,
+            sync=SyncPolicy.SYNCMON if syncmon else SyncPolicy.SPIN,
+            engine=engine,
+        )
+        t0 = time.perf_counter()
+        r = run_gemv_allreduce(cfg, 10_000.0, collect_segments=False)
+        wall = time.perf_counter() - t0
+        rows.append({"egpus": n, "wall_s": wall, "wtt_writes": r.wtt_registered})
+    # fit t = t_1 + n * t_e  (paper Eq. 1)
+    ns = np.array([r["egpus"] for r in rows], float)
+    ts = np.array([r["wall_s"] for r in rows], float)
+    A = np.stack([np.ones_like(ns), ns], axis=1)
+    (t1, te), *_ = np.linalg.lstsq(A, ts, rcond=None)
+    t1 = max(t1, 1e-9)
+    norm = ts / t1
+    return {
+        "rows": rows,
+        "t_1gpu_s": float(t1),
+        "t_egpu_s": float(te),
+        "normalized_at_max": float(norm[-1]),
+        "pass_sublinear": norm[-1] < (counts[-1] + 1) * 0.5,
+        "paper_claim": "normalized time at 255 eGPUs in 7.3x-35.9x, far "
+                       "below the 256x of full-detail simulation",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Figures 1/2: ideal vs. non-ideal timelines (variability characterization)
+# ---------------------------------------------------------------------------
+
+
+def fig12_variability() -> Dict:
+    cfg = SimConfig(sync=SyncPolicy.SPIN, engine=EngineKind.EVENT)
+    ideal = run_gemv_allreduce(cfg, 0.0)
+    slow = run_gemv_allreduce(
+        cfg, 0.0, perturb=PeerDelayPerturb({2: 30_000.0, 3: 30_000.0})
+    )
+    wait_i = phase_totals(ideal.segments).get("wait_flags", 0.0)
+    wait_s = phase_totals(slow.segments).get("wait_flags", 0.0)
+    return {
+        "ideal_wait_ns_total": wait_i,
+        "contended_wait_ns_total": wait_s,
+        "wait_inflation": wait_s / max(wait_i, 1.0),
+        "ideal_kernel_ns": ideal.kernel_span_ns,
+        "contended_kernel_ns": slow.kernel_span_ns,
+        "pass_inflation": wait_s > 10 * max(wait_i, 1.0),
+        "ascii_ideal": ascii_timeline(ideal.segments, max_rows=6),
+        "ascii_contended": ascii_timeline(slow.segments, max_rows=6),
+        "paper_claim": "identical kernels show ideal vs. wait-dominated "
+                       "timelines under transient peer delays (Figs. 1-2)",
+    }
+
+
+# ---------------------------------------------------------------------------
+# engine comparison (paper §3.2.2: WTT polling vs event queues) + vector
+# ---------------------------------------------------------------------------
+
+
+def engine_comparison() -> Dict:
+    rows = []
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT, EngineKind.VECTOR):
+        cfg = SimConfig(sync=SyncPolicy.SPIN, engine=eng)
+        t0 = time.perf_counter()
+        r = run_gemv_allreduce(cfg, 20_000.0, collect_segments=False)
+        rows.append(
+            {
+                "engine": eng.value,
+                "wall_s": time.perf_counter() - t0,
+                "flag_reads": r.flag_reads,
+                "head_polls": r.wtt_head_polls,
+            }
+        )
+    same = len({r["flag_reads"] for r in rows}) == 1
+    return {
+        "rows": rows,
+        "pass_identical_traffic": same,
+        "speedup_event_vs_cycle": rows[0]["wall_s"] / max(rows[1]["wall_s"], 1e-9),
+        "speedup_vector_vs_cycle": rows[0]["wall_s"] / max(rows[2]["wall_s"], 1e-9),
+    }

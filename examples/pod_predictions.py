@@ -1,0 +1,68 @@
+"""Pod-scale step-time predictions from the dry-run artifacts.
+
+Reads `results/dryrun/*.json` (run `python -m repro.launch.dryrun --all`
+first), rebuilds the three roofline terms, refines the collective term with
+Eidola's topology-aware ring algebra, and prints the predicted step-time
+envelope (no-overlap vs. perfectly-overlapped) per architecture — the
+framework's answer to "what will a step cost on the real pod?".
+
+    PYTHONPATH=src python examples/pod_predictions.py [--shape train_4k]
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.hlo_capture import CollectiveOp  # noqa: E402
+from repro.core.predictor import predict_step, roofline  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    topo = Topology((16, 16), ("data", "model"))
+    print(f"predicted step envelope, shape={args.shape}, {topo.describe()}")
+    print(f"{'arch':18s} {'bound_s':>9s} {'no-ovl_s':>9s} {'full-ovl_s':>10s} "
+          f"{'exposed_s':>9s} {'dominant':>10s}")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if os.path.basename(path).count("__") != 2:
+            continue  # skip tagged perf variants
+        r = json.load(open(path))
+        if r.get("shape") != args.shape or r.get("mesh") != "single":
+            continue
+        if r.get("status") != "ok":
+            continue
+        terms = roofline(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], topo=topo,
+            hlo_flops_per_device=r["flops_per_device"],
+            hlo_bytes_per_device=r["bytes_per_device"],
+            collective_bytes_per_device=int(r["collective_bytes_per_device"]),
+            model_flops_total=r["model_flops"],
+        )
+        # reconstruct a coarse collective schedule from the per-kind record
+        ops = []
+        for kind, cb in r.get("collectives", {}).items():
+            n = max(int(cb["count"]), 1)
+            per = int(cb["bytes"]) // n
+            ops += [CollectiveOp(kind, per, per, 16)] * min(n, 64)
+        pred = predict_step(terms, topo, ops)
+        rows.append((r["arch"], terms.bound_s, pred.no_overlap_s,
+                     pred.full_overlap_s, pred.exposed_comm_s, terms.dominant))
+    for arch, bound, no, full, exp, dom in sorted(rows, key=lambda x: -x[1]):
+        print(f"{arch:18s} {bound:9.3f} {no:9.3f} {full:10.3f} {exp:9.3f} "
+              f"{dom:>10s}")
+    if not rows:
+        print("no records found — run the dry-run first")
+
+
+if __name__ == "__main__":
+    main()

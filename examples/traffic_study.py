@@ -1,0 +1,82 @@
+"""Pod-scale traffic study: capture a real model's collective schedule from
+its compiled HLO and replay it in Eidola at cycle fidelity.
+
+This is the paper's Fig. 4 workflow end-to-end inside one process:
+ (1) measurement: compile a sharded train step and capture its collective
+     schedule (the framework's "profile");
+ (2) instrumentation: lower the schedule to timestamped eidolon writes;
+ (3) analysis: replay under spin vs. SyncMon synchronization and under
+     perturbed (straggler) peers, and compare exposure.
+
+    PYTHONPATH=src python examples/traffic_study.py
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.core import (  # noqa: E402
+    EngineKind,
+    PeerDelayPerturb,
+    SimConfig,
+    SyncPolicy,
+    Eidola,
+)
+from repro.core.hlo_capture import parse_collectives, schedule_to_trace, summarize  # noqa: E402
+from repro.core.predictor import predict_step, roofline  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.training import TrainConfig, build_train_step  # noqa: E402
+from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+
+
+def main() -> None:
+    # (1) capture: compile a sharded train step for a reduced gemma3-1b
+    cfg = reduced(get_config("gemma3-1b")).with_(n_layers=4)
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    model = Model(cfg, mesh=mesh)
+    step_fn, shardings, _ = build_train_step(
+        model, mesh, TrainConfig(optim=AdamWConfig())
+    )
+    tok = jax.ShapeDtypeStruct((8, 64), jnp.int32)
+    state = jax.eval_shape(lambda p: adamw_init(p, AdamWConfig()),
+                           model.abstract_params())
+    with mesh:
+        compiled = step_fn.lower(
+            model.abstract_params(), state, tok, tok
+        ).compile()
+    ops = parse_collectives(compiled.as_text())
+    print("captured collective schedule:")
+    print(summarize(ops))
+
+    # (2) lower to eidolon traces on the production topology
+    topo = Topology((4, 4), ("data", "model"))
+    trace = schedule_to_trace(ops, topo, compute_gap_ns=2000.0)
+    print(f"\ntrace: {len(trace)} registered writes, "
+          f"span {trace.span_ns():,.0f} ns")
+
+    # (3) replay: spin vs syncmon; healthy vs one straggling peer
+    for sync in (SyncPolicy.SPIN, SyncPolicy.SYNCMON):
+        for label, perturb in (
+            ("healthy", None),
+            ("straggler +50us", PeerDelayPerturb({1: 50_000.0})),
+        ):
+            sim_cfg = SimConfig(sync=sync, engine=EngineKind.EVENT)
+            r = Eidola(sim_cfg, trace, perturb=perturb).run()
+            print(
+                f"[{sync.value:8s} | {label:16s}] flag_reads={r.flag_reads:>8,} "
+                f"kernel={r.kernel_span_ns:>12,.0f} ns"
+            )
+
+    print("\n(SyncMon keeps sync traffic bounded even with the straggler; "
+          "spin-wait polling scales with the induced wait.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Checkpointing: zstd-compressed tensor store with async save + restart."""
+
+from .store import (
+    CheckpointManager,
+    load_pytree,
+    restore_latest,
+    save_pytree,
+)
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree", "restore_latest"]

@@ -1,0 +1,167 @@
+"""Checkpoint store: msgpack index + zstd-compressed raw tensors.
+
+Layout per step:
+    <dir>/step_0000042/
+        index.msgpack     # treedef paths, shapes, dtypes, checksums
+        data.bin.zst      # concatenated tensor bytes (zstd)
+        COMMIT            # written last; absence marks a torn checkpoint
+
+The COMMIT marker makes restores crash-safe: a save interrupted by a node
+failure is invisible to ``restore_latest``.  ``CheckpointManager`` adds async
+(background-thread) saves, retention, and restart bookkeeping — the
+checkpoint/restart half of the fault-tolerance story (see ``repro.ft``).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+__all__ = ["save_pytree", "load_pytree", "restore_latest", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_pytree(tree, path: str) -> None:
+    os.makedirs(path, exist_ok=True)
+    entries = []
+    blobs = []
+    off = 0
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        raw = np.ascontiguousarray(arr).tobytes()
+        entries.append(
+            {
+                "key": key,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "offset": off,
+                "nbytes": len(raw),
+                "crc32": zlib.crc32(raw),
+            }
+        )
+        blobs.append(raw)
+        off += len(raw)
+    payload = b"".join(blobs)
+    comp = zstd.ZstdCompressor(level=3).compress(payload)
+    with open(os.path.join(path, "data.bin.zst"), "wb") as f:
+        f.write(comp)
+    with open(os.path.join(path, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"entries": entries, "total": off}))
+    # commit marker last: restores ignore torn checkpoints
+    with open(os.path.join(path, "COMMIT"), "w") as f:
+        f.write("ok")
+
+
+def load_pytree(template, path: str, shardings=None):
+    """Restore into the structure of ``template`` (arrays or SDStructs)."""
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+    with open(os.path.join(path, "data.bin.zst"), "rb") as f:
+        payload = zstd.ZstdDecompressor().decompress(f.read())
+    by_key = {e["key"]: e for e in index["entries"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
+    )
+    out = []
+    for (pathkey, leaf), shard in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(pathkey)
+        e = by_key.get(key)
+        if e is None:
+            raise KeyError(f"checkpoint missing tensor {key}")
+        raw = payload[e["offset"] : e["offset"] + e["nbytes"]]
+        if zlib.crc32(raw) != e["crc32"]:
+            raise IOError(f"checksum mismatch for {key}")
+        arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(e["shape"])
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        val = jnp.asarray(arr, dtype=want_dtype)
+        if shard is not None:
+            val = jax.device_put(val, shard)
+        out.append(val)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _step_dirs(root: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_"):
+            full = os.path.join(root, name)
+            if os.path.exists(os.path.join(full, "COMMIT")):
+                try:
+                    out.append((int(name.split("_")[1]), full))
+                except ValueError:
+                    continue
+    return sorted(out)
+
+
+def restore_latest(template, root: str, shardings=None):
+    """(step, tree) from the newest committed checkpoint, or (None, None)."""
+    dirs = _step_dirs(root)
+    if not dirs:
+        return None, None
+    step, path = dirs[-1]
+    return step, load_pytree(template, path, shardings)
+
+
+class CheckpointManager:
+    """Async, retained, crash-safe checkpoints."""
+
+    def __init__(self, root: str, *, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:07d}")
+
+    def save(self, step: int, tree) -> None:
+        # snapshot to host BEFORE handing to the writer thread so training can
+        # mutate device buffers immediately (async checkpointing)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def do_save():
+            save_pytree(host_tree, self.path_for(step))
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=do_save, daemon=True)
+            self._thread.start()
+        else:
+            do_save()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template, shardings=None):
+        self.wait()
+        return restore_latest(template, self.root, shardings)
+
+    def steps(self) -> List[int]:
+        return [s for s, _ in _step_dirs(self.root)]
+
+    def _gc(self) -> None:
+        dirs = _step_dirs(self.root)
+        for _, path in dirs[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(path, ignore_errors=True)

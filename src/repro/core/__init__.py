@@ -1,0 +1,25 @@
+"""Eidola core: multi-device communication-traffic simulation (the paper's
+contribution), plus the compiled-HLO capture bridge that makes it a
+first-class feature of the training framework."""
+
+from .config import EngineKind, SimConfig, SyncPolicy
+from .events import PHASES, RegisteredWrite, Segment, TraceBundle
+from .memory import AddressMap, DirectoryMemory, TrafficCounters
+from .monitor import MonitorEntry, MonitorLog
+from .perturb import GaussianPerturb, NullPerturb, PeerDelayPerturb
+from .simulator import Eidola, Report, run_gemv_allreduce
+from .target import EidolaDeadlock, TargetDevice
+from .workload import GemvAllReduceWorkload, make_gemv_allreduce_traces
+from .wtt import WriteTrackingTable
+
+__all__ = [
+    "EngineKind", "SimConfig", "SyncPolicy",
+    "PHASES", "RegisteredWrite", "Segment", "TraceBundle",
+    "AddressMap", "DirectoryMemory", "TrafficCounters",
+    "MonitorEntry", "MonitorLog",
+    "GaussianPerturb", "NullPerturb", "PeerDelayPerturb",
+    "Eidola", "Report", "run_gemv_allreduce",
+    "EidolaDeadlock", "TargetDevice",
+    "GemvAllReduceWorkload", "make_gemv_allreduce_traces",
+    "WriteTrackingTable",
+]

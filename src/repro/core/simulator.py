@@ -1,0 +1,151 @@
+"""Eidola simulator facade.
+
+Wires together the address map, directory memory, Monitor Log, workload model,
+WTT, and the selected engine; produces a :class:`Report` with the quantities
+the paper measures (flag/non-flag reads, kernel span, per-WG timelines,
+wall-clock simulation time).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .config import EngineKind, SimConfig, SyncPolicy
+from .engine import CyclePollEngine, EventQueueEngine
+from .events import RegisteredWrite, Segment, TraceBundle
+from .memory import AddressMap, DirectoryMemory
+from .monitor import MonitorLog
+from .target import TargetDevice
+from .workload import GemvAllReduceWorkload, make_gemv_allreduce_traces
+from .wtt import WriteTrackingTable
+
+__all__ = ["Report", "Eidola", "run_gemv_allreduce"]
+
+
+@dataclass
+class Report:
+    engine: str
+    sync: str
+    traffic: Dict[str, int]
+    flag_reads: int
+    nonflag_reads: int
+    kernel_span_ns: float
+    sim_cycles: int
+    wall_time_s: float
+    wtt_registered: int
+    wtt_enacted: int
+    wtt_head_polls: int
+    monitor_stats: Dict[str, int] = field(default_factory=dict)
+    segments: List[Segment] = field(default_factory=list)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        return (
+            f"[{self.engine}/{self.sync}] flag_reads={self.flag_reads} "
+            f"nonflag_reads={self.nonflag_reads} "
+            f"kernel={self.kernel_span_ns:.0f}ns "
+            f"wall={self.wall_time_s * 1e3:.1f}ms"
+        )
+
+
+class Eidola:
+    """One simulated kernel launch on a multi-device system.
+
+    ``traces`` carries the eidolons' registered writes (the setup-kernel
+    payload).  The simulation enacts each write at
+    ``wakeup_ns + cfg.xgmi_enact_latency_ns`` — the paper's wakeupTime is the
+    *issue* time; visibility at the target directory includes the fabric hop.
+    """
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        traces: TraceBundle,
+        *,
+        amap: Optional[AddressMap] = None,
+        perturb=None,
+        collect_segments: bool = True,
+    ):
+        self.cfg = cfg.validate()
+        self.traces = traces
+        self.amap = amap or AddressMap(n_devices=cfg.n_devices)
+        self.perturb = perturb
+        self.collect_segments = collect_segments
+
+    def _build(self):
+        cfg = self.cfg
+        memory = DirectoryMemory(self.amap)
+        monitor = (
+            MonitorLog(
+                memory,
+                semantics=cfg.monitor_semantics,  # type: ignore[arg-type]
+                wake_latency_cycles=cfg.wake_latency_cycles,
+            )
+            if cfg.sync == SyncPolicy.SYNCMON
+            else None
+        )
+        workload = GemvAllReduceWorkload(cfg, self.amap)
+        device = TargetDevice(cfg, workload, memory, monitor, perturb=self.perturb)
+        wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
+        for w in self.traces:
+            eff = RegisteredWrite(
+                wakeup_ns=w.wakeup_ns + cfg.xgmi_enact_latency_ns,
+                addr=w.addr,
+                data=w.data,
+                size=w.size,
+                src=w.src,
+                seq=w.seq,
+            )
+            if self.perturb is not None:
+                eff = self.perturb.jitter_write(eff)
+            wtt.register(eff)
+        return memory, monitor, device, wtt
+
+    def run(self) -> Report:
+        cfg = self.cfg
+        if cfg.engine == EngineKind.VECTOR:
+            from .vector_engine import run_vectorized
+
+            return run_vectorized(self)
+        memory, monitor, device, wtt = self._build()
+        engine = (
+            CyclePollEngine() if cfg.engine == EngineKind.CYCLE else EventQueueEngine()
+        )
+        res = engine.run(device, wtt)
+        return Report(
+            engine=engine.name,
+            sync=cfg.sync.value,
+            traffic=memory.traffic.as_dict(),
+            flag_reads=memory.traffic.flag_reads,
+            nonflag_reads=memory.traffic.nonflag_reads,
+            kernel_span_ns=cfg.cycles_to_ns(device.kernel_end_cycle),
+            sim_cycles=res.sim_cycles,
+            wall_time_s=res.wall_time_s,
+            wtt_registered=wtt.stats.registered,
+            wtt_enacted=wtt.stats.enacted,
+            wtt_head_polls=res.head_polls,
+            monitor_stats=dict(monitor.stats) if monitor else {},
+            segments=device.collect_segments() if self.collect_segments else [],
+            meta=dict(self.traces.meta),
+        )
+
+
+def run_gemv_allreduce(
+    cfg: SimConfig,
+    flag_delays_ns: Sequence[float] | float,
+    *,
+    perturb=None,
+    collect_segments: bool = True,
+) -> Report:
+    """Convenience: build Table-1-style traces for ``cfg`` and simulate."""
+    amap = AddressMap(n_devices=cfg.n_devices)
+    traces = make_gemv_allreduce_traces(cfg, flag_delays_ns, amap)
+    return Eidola(
+        cfg,
+        traces,
+        amap=amap,
+        perturb=perturb,
+        collect_segments=collect_segments,
+    ).run()

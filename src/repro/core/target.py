@@ -1,0 +1,404 @@
+"""Detailed target-device model: per-workgroup phase state machines.
+
+The paper simulates exactly one device in detailed timing mode; its figures
+measure (a) per-workgroup phase timelines (Figs. 1/2) and (b) memory-read
+traffic split into flag vs. non-flag categories (Figs. 6/9).  This module
+models the target at that granularity: each workgroup advances through the
+fused-kernel phases with durations from its :class:`WGPlan`; compute/memory
+phase traffic is accounted in closed form at phase completion; the *wait*
+phase interacts with the WTT-enacted peer flag writes under one of two
+synchronization policies:
+
+* ``SPIN``    — sequential per-peer polling loop; one flag read per poll tick
+                while the current flag is unset, one observe read once set.
+* ``SYNCMON`` — check once; if unset, arm a Monitor Log entry and mwait
+                (descheduled, zero reads while waiting); on wake, a validation
+                read that may coalesce with other wavefronts woken in the same
+                cycle on the same CU (the fill triggered by the waking write
+                serves adjacent waiters).
+
+The model is engine-agnostic: cycle-poll and event-queue engines drive the
+same transitions and therefore produce bit-identical traffic and timelines.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .config import SimConfig, SyncPolicy
+from .events import RegisteredWrite, Segment
+from .memory import AddressMap, DirectoryMemory
+from .monitor import MonitorLog
+from .workload import GemvAllReduceWorkload, WGPlan
+
+__all__ = ["TargetDevice", "EidolaDeadlock"]
+
+
+class EidolaDeadlock(RuntimeError):
+    """Raised when all workgroups are blocked and no pending writes remain."""
+
+
+# Workgroup lifecycle states.
+_PENDING = "pending"
+_REMOTE = "remote_tiles"
+_FLAGW = "flag_write"
+_LOCAL = "local_tiles"
+_WAIT = "wait"
+_REDUCE = "reduce"
+_BCAST = "broadcast"
+_DONE = "done"
+
+_PHASE_AFTER = {
+    _PENDING: _REMOTE,
+    _REMOTE: _FLAGW,
+    _FLAGW: _LOCAL,
+    _LOCAL: _WAIT,
+    _WAIT: _REDUCE,
+    _REDUCE: _BCAST,
+    _BCAST: _DONE,
+}
+
+
+@dataclass
+class _WG:
+    plan: WGPlan
+    state: str = _PENDING
+    phase_start: int = 0          # cycle the current phase began
+    # wait-phase bookkeeping
+    flag_idx: int = 0
+    t_cursor: int = 0             # next poll/check tick (cycles)
+    blocked_on: Optional[int] = None   # peer id we are spinning/mwaiting on
+    in_mwait: bool = False
+    t_arm: int = 0                # cycle the current monitor was armed
+    wait_start: int = 0
+    segments: List[Segment] = field(default_factory=list)
+    desched_segments: List[Tuple[int, int]] = field(default_factory=list)
+
+
+class TargetDevice:
+    """The single detailed device (device 0) of an Eidola simulation."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        workload: GemvAllReduceWorkload,
+        memory: DirectoryMemory,
+        monitor_log: Optional[MonitorLog] = None,
+        perturb=None,
+    ):
+        self.cfg = cfg
+        self.workload = workload
+        self.amap = workload.amap
+        self.memory = memory
+        self.monitor_log = monitor_log
+        if cfg.sync == SyncPolicy.SYNCMON and monitor_log is None:
+            raise ValueError("SYNCMON policy requires a MonitorLog")
+        self.perturb = perturb
+        self.flag_order = workload.flag_order()
+        self.flag_set_cycle: Dict[int, int] = {}
+        self._addr_to_peer = {
+            self.amap.flag_addr(g): g for g in range(1, cfg.n_devices)
+        }
+        # spin mode: peer -> set of blocked wg ids
+        self._spin_waiters: Dict[int, Set[int]] = {}
+        # syncmon: wg -> monitor entry currently armed
+        self._armed: Dict[int, object] = {}
+        self.wgs = [_WG(plan=p) for p in workload.plans]
+        # transition list managed by the engine via (cycle, wg) pairs
+        self._ready: List[Tuple[int, int]] = []
+        for wg in self.wgs:
+            d = self._dur(wg, _PENDING)
+            self._push(wg.plan.dispatch_cycle, wg.plan.wg)
+        self.done_count = 0
+        self.kernel_end_cycle = 0
+
+    # ------------------------------------------------------------------
+    # transition queue (a tiny heap the engines drain)
+    # ------------------------------------------------------------------
+
+    def _push(self, cycle: int, wg_id: int) -> None:
+        import heapq
+
+        heapq.heappush(self._ready, (int(cycle), wg_id))
+
+    def next_transition_cycle(self) -> Optional[int]:
+        return self._ready[0][0] if self._ready else None
+
+    def process_until(self, cycle: int) -> None:
+        """Fire all transitions scheduled at or before ``cycle``."""
+        import heapq
+
+        while self._ready and self._ready[0][0] <= cycle:
+            t, wg_id = heapq.heappop(self._ready)
+            self._advance(self.wgs[wg_id], t)
+
+    @property
+    def all_done(self) -> bool:
+        return self.done_count == len(self.wgs)
+
+    def blocked_count(self) -> int:
+        return sum(1 for w in self.wgs if w.state == _WAIT and w.blocked_on is not None)
+
+    # ------------------------------------------------------------------
+    # phase durations (perturbable)
+    # ------------------------------------------------------------------
+
+    def _dur(self, wg: _WG, state: str) -> int:
+        p = wg.plan
+        base = {
+            _PENDING: 0,
+            _REMOTE: p.remote_cycles,
+            _FLAGW: p.flag_write_cycles,
+            _LOCAL: p.local_cycles,
+            _REDUCE: p.reduce_cycles,
+            _BCAST: p.broadcast_cycles,
+        }.get(state, 0)
+        if self.perturb is not None and base > 0:
+            base = self.perturb.scale_phase(p.wg, state, base)
+        return base
+
+    # ------------------------------------------------------------------
+    # phase completion accounting
+    # ------------------------------------------------------------------
+
+    def _complete_phase(self, wg: _WG, state: str, start: int, end: int) -> None:
+        cfg, p = self.cfg, wg.plan
+        ns = cfg.cycles_to_ns
+        if end > start or state in (_REMOTE, _LOCAL, _FLAGW, _REDUCE, _BCAST):
+            name = {
+                _REMOTE: "remote_tiles",
+                _FLAGW: "flag_write",
+                _LOCAL: "local_tiles",
+                _WAIT: "wait_flags",
+                _REDUCE: "reduce",
+                _BCAST: "broadcast",
+            }.get(state)
+            if name and end >= start:
+                wg.segments.append(
+                    Segment(wg=p.wg, phase=name, start_ns=ns(start), end_ns=ns(end))
+                )
+        if state == _REMOTE:
+            self.memory.bulk_reads(
+                p.remote_sector_reads, bytes_each=cfg.sector_bytes
+            )
+            self.memory.issue_xgmi_out(
+                p.remote_xgmi_writes, bytes_each=cfg.elem_bytes * cfg.N
+            )
+        elif state == _FLAGW:
+            self.memory.issue_xgmi_out(len(self.flag_order), bytes_each=8)
+        elif state == _LOCAL:
+            self.memory.bulk_reads(
+                p.local_sector_reads, bytes_each=cfg.sector_bytes
+            )
+            self.memory.bulk_local_writes(
+                p.local_partial_writes, bytes_each=cfg.elem_bytes * cfg.N
+            )
+        elif state == _REDUCE:
+            self.memory.bulk_reads(p.reduce_reads, bytes_each=cfg.elem_bytes)
+        elif state == _BCAST:
+            self.memory.issue_xgmi_out(
+                p.broadcast_xgmi_writes, bytes_each=cfg.elem_bytes * cfg.N
+            )
+            self.memory.bulk_local_writes(
+                p.broadcast_local_writes, bytes_each=cfg.elem_bytes * cfg.N
+            )
+
+    # ------------------------------------------------------------------
+    # the state machine
+    # ------------------------------------------------------------------
+
+    def _advance(self, wg: _WG, now: int) -> None:
+        if wg.state == _DONE:
+            return
+        if wg.state == _WAIT:
+            self._run_wait(wg, now)
+            return
+        # completing a timed phase
+        if wg.state != _PENDING:
+            self._complete_phase(wg, wg.state, wg.phase_start, now)
+        nxt = _PHASE_AFTER[wg.state]
+        wg.state = nxt
+        wg.phase_start = now
+        if nxt == _WAIT:
+            wg.flag_idx = 0
+            wg.t_cursor = now
+            wg.wait_start = now
+            self._run_wait(wg, now)
+        elif nxt == _DONE:
+            self._finish(wg, now)
+        else:
+            self._push(now + self._dur(wg, nxt), wg.plan.wg)
+
+    def _finish(self, wg: _WG, now: int) -> None:
+        self.done_count += 1
+        self.kernel_end_cycle = max(self.kernel_end_cycle, now)
+
+    # ------------------------------------------------------------------
+    # WAIT phase: spin / syncmon
+    # ------------------------------------------------------------------
+
+    def _run_wait(self, wg: _WG, now: int) -> None:
+        cfg = self.cfg
+        wg.blocked_on = None
+        while wg.flag_idx < len(self.flag_order):
+            g = self.flag_order[wg.flag_idx]
+            set_c = self.flag_set_cycle.get(g)
+            if set_c is not None and set_c <= wg.t_cursor:
+                # observe-and-advance: a single read sees the flag set
+                self.memory.bulk_reads(1, bytes_each=8, flag=True)
+                wg.t_cursor += cfg.flag_check_cycles
+                wg.flag_idx += 1
+                continue
+            if cfg.sync == SyncPolicy.SPIN:
+                if set_c is not None:
+                    # flag will be visible at set_c > t_cursor: poll until then
+                    nticks = math.ceil(
+                        (set_c - wg.t_cursor) / cfg.poll_interval_cycles
+                    )
+                    self.memory.bulk_reads(nticks + 1, bytes_each=8, flag=True)
+                    wg.t_cursor += (
+                        nticks * cfg.poll_interval_cycles + cfg.flag_check_cycles
+                    )
+                    wg.flag_idx += 1
+                    continue
+                # unset with unknown set time: block until notify
+                wg.blocked_on = g
+                self._spin_waiters.setdefault(g, set()).add(wg.plan.wg)
+                return
+            else:  # SYNCMON
+                # one check read (sees unset or not-yet-visible)
+                self.memory.bulk_reads(1, bytes_each=8, flag=True)
+                t_arm = wg.t_cursor + cfg.monitor_arm_cycles
+                if set_c is not None and set_c <= t_arm:
+                    # race window: write landed between check and mwait; the
+                    # mwait returns immediately after its own validation read
+                    self.memory.bulk_reads(1, bytes_each=8, flag=True)
+                    if self.monitor_log is not None:
+                        self.monitor_log.stats["immediate_mwait_returns"] += 1
+                    wg.t_cursor = t_arm + cfg.flag_check_cycles
+                    wg.flag_idx += 1
+                    continue
+                # arm + deschedule
+                entry = self.monitor_log.monitor(
+                    self.amap.flag_addr(g), 8, 1
+                )
+                entry.waiting_wfs.add(wg.plan.wg)
+                self._armed[wg.plan.wg] = entry
+                wg.blocked_on = g
+                wg.in_mwait = True
+                wg.t_arm = t_arm
+                wg.desched_segments.append((t_arm, -1))  # end filled on wake
+                return
+        # all flags observed — wait phase completes at the poll cursor
+        end = wg.t_cursor
+        self._complete_phase(wg, _WAIT, wg.wait_start, end)
+        wg.state = _REDUCE
+        wg.phase_start = end
+        self._push(end + self._dur(wg, _REDUCE), wg.plan.wg)
+
+    # ------------------------------------------------------------------
+    # peer-write enactment hooks (called by the engines)
+    # ------------------------------------------------------------------
+
+    def on_writes_enacted(self, writes: List[RegisteredWrite], cycle: int) -> None:
+        """Process a batch of WTT writes that were enacted at ``cycle``.
+
+        The DirectoryMemory has already applied them (and fired Monitor Log
+        observers).  Here we resolve flag visibility for blocked workgroups.
+        """
+        cfg = self.cfg
+        woken: List[int] = []
+        for w in writes:
+            peer = self._addr_to_peer.get(w.addr)
+            if peer is None:
+                continue
+            if peer not in self.flag_set_cycle:
+                self.flag_set_cycle[peer] = cycle
+            if cfg.sync == SyncPolicy.SPIN:
+                waiters = self._spin_waiters.pop(peer, set())
+                for wg_id in sorted(waiters):
+                    wg = self.wgs[wg_id]
+                    # account the polls from t_cursor up to the observation tick
+                    nticks = math.ceil(
+                        max(0, cycle - wg.t_cursor) / cfg.poll_interval_cycles
+                    )
+                    self.memory.bulk_reads(nticks + 1, bytes_each=8, flag=True)
+                    wg.t_cursor += (
+                        nticks * cfg.poll_interval_cycles + cfg.flag_check_cycles
+                    )
+                    wg.flag_idx += 1
+                    wg.blocked_on = None
+                    self._push(wg.t_cursor, wg_id)
+        if cfg.sync == SyncPolicy.SYNCMON and self.monitor_log is not None:
+            pending = self.monitor_log.pop_wakes_until(
+                cycle + cfg.wake_latency_cycles
+            )
+            # group simultaneous wakes by (wake_cycle, cu) for the coalesced
+            # validation read accounting
+            groups: Dict[Tuple[int, int], List[int]] = {}
+            for wg_id, wake_c in pending:
+                wg = self.wgs[wg_id]
+                if not wg.in_mwait:
+                    continue
+                if cycle <= wg.t_arm:
+                    # race window: the write landed between the check read and
+                    # the monitor arming; the mwait returns immediately after
+                    # its own (uncoalesced) validation read at arm time
+                    self.memory.bulk_reads(1, bytes_each=8, flag=True)
+                    wg.in_mwait = False
+                    self._armed.pop(wg_id, None)
+                    if wg.desched_segments and wg.desched_segments[-1][1] == -1:
+                        wg.desched_segments.pop()  # never actually descheduled
+                    if self.monitor_log is not None:
+                        self.monitor_log.stats["immediate_mwait_returns"] += 1
+                    wg.blocked_on = None
+                    wg.flag_idx += 1
+                    wg.t_cursor = wg.t_arm + cfg.flag_check_cycles
+                    self._push(wg.t_cursor, wg_id)
+                    continue
+                groups.setdefault((wake_c, wg.plan.cu), []).append(wg_id)
+            for (wake_c, _cu), members in sorted(groups.items()):
+                n_reads = math.ceil(len(members) / max(1, cfg.wake_coalesce_width))
+                self.memory.bulk_reads(n_reads, bytes_each=8, flag=True)
+                for wg_id in members:
+                    wg = self.wgs[wg_id]
+                    wg.in_mwait = False
+                    self._armed.pop(wg_id, None)
+                    # close the descheduled segment
+                    if wg.desched_segments and wg.desched_segments[-1][1] == -1:
+                        st = wg.desched_segments[-1][0]
+                        wg.desched_segments[-1] = (st, wake_c)
+                    jitter = wg.plan.wg % max(1, cfg.requeue_jitter_mod)
+                    resume = wake_c + jitter
+                    # the coalesced validation read observed the blocking flag;
+                    # if it is (now) set, advance past it without another read
+                    g = wg.blocked_on
+                    set_c = self.flag_set_cycle.get(g)
+                    if set_c is not None and set_c <= resume:
+                        wg.flag_idx += 1
+                    wg.blocked_on = None
+                    wg.t_cursor = resume + cfg.flag_check_cycles
+                    self._push(wg.t_cursor, wg.plan.wg)
+
+    # ------------------------------------------------------------------
+    # results
+    # ------------------------------------------------------------------
+
+    def collect_segments(self) -> List[Segment]:
+        segs: List[Segment] = []
+        ns = self.cfg.cycles_to_ns
+        for wg in self.wgs:
+            segs.extend(wg.segments)
+            for st, en in wg.desched_segments:
+                if en >= st >= 0:
+                    segs.append(
+                        Segment(
+                            wg=wg.plan.wg,
+                            phase="descheduled",
+                            start_ns=ns(st),
+                            end_ns=ns(en),
+                        )
+                    )
+        return sorted(segs, key=lambda s: (s.wg, s.start_ns))

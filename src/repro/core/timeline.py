@@ -1,0 +1,103 @@
+"""Timeline rendering and export (paper Figs. 1, 2, 8).
+
+Per-workgroup phase segments can be exported as a Chrome-trace / Perfetto
+JSON (openable at ui.perfetto.dev), as CSV, or rendered as a terminal ASCII
+strip chart for quick inspection of ideal vs. non-ideal executions.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .events import PHASE_COLORS, Segment
+
+__all__ = ["to_chrome_trace", "to_csv", "ascii_timeline", "phase_totals"]
+
+_GLYPH = {
+    "remote_tiles": "g",
+    "flag_write": "B",
+    "local_tiles": "G",
+    "wait_flags": "r",
+    "reduce": "b",
+    "broadcast": "^",
+    "descheduled": ".",
+}
+
+
+def to_chrome_trace(
+    segments: Sequence[Segment], *, device: int = 0, label: str = "GPU"
+) -> str:
+    """Chrome trace-event JSON; one tid per workgroup row, like the figures."""
+    events = []
+    for s in segments:
+        events.append(
+            {
+                "name": s.phase,
+                "cat": PHASE_COLORS.get(s.phase, "unknown"),
+                "ph": "X",
+                "ts": s.start_ns / 1000.0,  # chrome traces are in us
+                "dur": max(s.dur_ns, 1e-3) / 1000.0,
+                "pid": device,
+                "tid": s.wg,
+                "args": {"phase": s.phase},
+            }
+        )
+    meta = [
+        {
+            "name": "process_name",
+            "ph": "M",
+            "pid": device,
+            "args": {"name": f"{label}{device}"},
+        }
+    ]
+    return json.dumps({"traceEvents": meta + events})
+
+
+def to_csv(segments: Sequence[Segment]) -> str:
+    lines = ["wg,phase,start_ns,end_ns"]
+    for s in segments:
+        lines.append(f"{s.wg},{s.phase},{s.start_ns:.3f},{s.end_ns:.3f}")
+    return "\n".join(lines)
+
+
+def ascii_timeline(
+    segments: Sequence[Segment],
+    *,
+    width: int = 100,
+    max_rows: int = 16,
+    row_stride: Optional[int] = None,
+) -> str:
+    """Terminal strip chart: one row per (sampled) workgroup.
+
+    Glyphs: g/G compute (remote/local tiles), B flag write, r spin-wait,
+    b reduce, ^ broadcast, . descheduled — mirroring the paper's palette.
+    """
+    if not segments:
+        return "(no segments)"
+    t_end = max(s.end_ns for s in segments)
+    t_end = max(t_end, 1e-9)
+    by_wg: Dict[int, List[Segment]] = {}
+    for s in segments:
+        by_wg.setdefault(s.wg, []).append(s)
+    wgs = sorted(by_wg)
+    stride = row_stride or max(1, len(wgs) // max_rows)
+    rows = []
+    for wg in wgs[::stride][:max_rows]:
+        row = [" "] * width
+        for s in sorted(by_wg[wg], key=lambda x: x.start_ns):
+            a = int(s.start_ns / t_end * (width - 1))
+            b = int(s.end_ns / t_end * (width - 1))
+            for i in range(a, max(a, b) + 1):
+                row[i] = _GLYPH.get(s.phase, "?")
+        rows.append(f"wg{wg:4d} |" + "".join(row) + "|")
+    header = f"t=0 {'-' * (width - 14)} t={t_end / 1000.0:.2f}us"
+    return "\n".join([header] + rows)
+
+
+def phase_totals(segments: Sequence[Segment]) -> Dict[str, float]:
+    """Total ns spent per phase across all workgroups."""
+    out: Dict[str, float] = {}
+    for s in segments:
+        out[s.phase] = out.get(s.phase, 0.0) + s.dur_ns
+    return out

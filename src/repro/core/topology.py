@@ -1,0 +1,142 @@
+"""Interconnect topology and collective-cost model.
+
+Maps the paper's xGMI fabric onto the TPU v5e target: a 2D ICI torus within a
+pod (16x16 for the production mesh) and a lower-bandwidth inter-pod fabric for
+the ``pod`` axis.  Collective costs use standard ring/bidirectional-ring
+algebra; they feed the roofline's collective term cross-check and generate
+arrival schedules for Eidola pod-scale replay (each ring step's completion is
+one semaphore write — the TPU analogue of the paper's flag writes).
+
+Hardware constants follow the assignment: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Literal, Optional, Sequence, Tuple
+
+__all__ = ["HardwareSpec", "Topology", "CollectiveCost", "V5E"]
+
+CollectiveKind = Literal[
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"
+]
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_link_bw: float = 50e9           # bytes/s per link per direction
+    ici_links_per_axis: int = 1         # links a ring along one axis can use
+    ici_hop_latency_s: float = 1e-6
+    dci_link_bw: float = 12.5e9         # inter-pod (pod axis) bandwidth
+    dci_hop_latency_s: float = 10e-6
+    vmem_bytes: int = 128 * 1024 * 1024
+    hbm_bytes: int = 16 * 1024**3
+
+
+V5E = HardwareSpec()
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    kind: str
+    bytes_in: int          # per-device operand bytes
+    axis_size: int
+    link_bytes: int        # bytes crossing the busiest link
+    time_s: float
+    steps: int             # ring steps (used for arrival schedules)
+
+    def arrival_times_s(self, start_s: float = 0.0) -> List[float]:
+        """Completion time of each ring step (semaphore-write schedule)."""
+        if self.steps <= 0:
+            return [start_s]
+        dt = self.time_s / self.steps
+        return [start_s + dt * (i + 1) for i in range(self.steps)]
+
+
+@dataclass(frozen=True)
+class Topology:
+    """A mesh of chips with per-axis fabric characteristics."""
+
+    axis_sizes: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+    hw: HardwareSpec = V5E
+    # axes routed over the inter-pod fabric rather than intra-pod ICI
+    dci_axes: Tuple[str, ...] = ("pod",)
+
+    def __post_init__(self):
+        if len(self.axis_sizes) != len(self.axis_names):
+            raise ValueError("axis_sizes and axis_names length mismatch")
+
+    @property
+    def n_chips(self) -> int:
+        return math.prod(self.axis_sizes)
+
+    def axis_size(self, name: str) -> int:
+        return self.axis_sizes[self.axis_names.index(name)]
+
+    def _fabric(self, axis: str) -> Tuple[float, float]:
+        if axis in self.dci_axes:
+            return self.hw.dci_link_bw, self.hw.dci_hop_latency_s
+        return (
+            self.hw.ici_link_bw * self.hw.ici_links_per_axis,
+            self.hw.ici_hop_latency_s,
+        )
+
+    # ------------------------------------------------------------------
+    # collective cost algebra (bidirectional ring per mesh axis)
+    # ------------------------------------------------------------------
+
+    def collective(self, kind: str, bytes_in: int, axis: str) -> CollectiveCost:
+        """Cost of one collective of per-device operand size ``bytes_in``.
+
+        bytes_in semantics per kind (per device):
+          all-reduce      : the full reduced tensor's shard held per device
+          all-gather      : the local shard that gets gathered
+          reduce-scatter  : the full input that gets reduce-scattered
+          all-to-all      : the full local buffer exchanged
+          collective-permute : the buffer shifted to the neighbour
+        """
+        k = self.axis_size(axis)
+        bw, lat = self._fabric(axis)
+        if k <= 1:
+            return CollectiveCost(kind, bytes_in, k, 0, 0.0, 0)
+        if kind == "all-reduce":
+            # reduce-scatter + all-gather, 2(k-1) steps of bytes/k
+            link = 2 * bytes_in * (k - 1) // k
+            steps = 2 * (k - 1)
+        elif kind == "all-gather":
+            link = bytes_in * (k - 1)
+            steps = k - 1
+        elif kind == "reduce-scatter":
+            link = bytes_in * (k - 1) // k
+            steps = k - 1
+        elif kind == "all-to-all":
+            link = bytes_in * (k - 1) // k
+            steps = k - 1
+        elif kind == "collective-permute":
+            link = bytes_in
+            steps = 1
+        else:
+            raise ValueError(f"unknown collective kind {kind!r}")
+        time = link / bw + steps * lat
+        return CollectiveCost(kind, bytes_in, k, link, time, steps)
+
+    def flat_collective_seconds(self, total_bytes: int, axis: Optional[str] = None) -> float:
+        """The assignment's flat roofline collective term:
+        collective_bytes / link_bw (per chip)."""
+        bw, _ = self._fabric(axis or self.axis_names[-1])
+        return total_bytes / bw
+
+    # ------------------------------------------------------------------
+
+    def describe(self) -> str:
+        axes = ", ".join(
+            f"{n}={s}{' (DCI)' if n in self.dci_axes else ''}"
+            for n, s in zip(self.axis_names, self.axis_sizes)
+        )
+        return f"<Topology {self.n_chips} chips: {axes}; {self.hw.name}>"

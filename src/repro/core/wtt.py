@@ -1,0 +1,122 @@
+"""Write Tracking Table (WTT).
+
+The WTT is the paper's core simulator-side data structure (§3.1): a priority
+queue of registered writes sorted by ``wakeupTime``.  The detailed engine polls
+the head every simulated cycle; when current time reaches the head's wakeup
+time, *all* entries sharing that timestamp are popped and enacted as xGMI
+writes.  Registration order is arbitrary; pops are strictly chronological with
+registration order (``seq``) as a deterministic tie-break.
+
+Timestamps are registered in nanoseconds (as in the pseudo-op) and converted to
+cycles with the device clock, exactly as the paper describes ("these timestamps
+are converted into cycles based on the device clock frequency defined in the
+gem5 configuration").
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Tuple
+
+from .events import RegisteredWrite, TraceBundle
+
+__all__ = ["WriteTrackingTable", "WTTStats"]
+
+
+@dataclass
+class WTTStats:
+    registered: int = 0
+    enacted: int = 0
+    max_pending: int = 0
+    head_polls: int = 0  # number of O(1) head comparisons performed
+
+
+class WriteTrackingTable:
+    """Priority queue of pending emulated writes, keyed by wakeup cycle."""
+
+    def __init__(self, clock_ghz: float = 1.5):
+        if clock_ghz <= 0:
+            raise ValueError("clock_ghz must be positive")
+        self.clock_ghz = float(clock_ghz)
+        # heap entries: (wakeup_cycle, seq, RegisteredWrite)
+        self._heap: List[Tuple[int, int, RegisteredWrite]] = []
+        self.stats = WTTStats()
+
+    # -- time conversion -----------------------------------------------------
+
+    def ns_to_cycles(self, ns: float) -> int:
+        return int(round(ns * self.clock_ghz))
+
+    def cycles_to_ns(self, cycles: int) -> float:
+        return cycles / self.clock_ghz
+
+    # -- registration --------------------------------------------------------
+
+    def register(self, write: RegisteredWrite) -> None:
+        cyc = self.ns_to_cycles(write.wakeup_ns)
+        heapq.heappush(self._heap, (cyc, write.seq, write))
+        self.stats.registered += 1
+        self.stats.max_pending = max(self.stats.max_pending, len(self._heap))
+
+    def register_bundle(self, bundle: TraceBundle) -> None:
+        for w in bundle:
+            self.register(w)
+
+    # -- queries -------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    @property
+    def empty(self) -> bool:
+        return not self._heap
+
+    def peek_wakeup_cycle(self) -> Optional[int]:
+        """Wakeup cycle of the head entry, or None if empty.  O(1)."""
+        if not self._heap:
+            return None
+        return self._heap[0][0]
+
+    # -- the per-cycle poll ---------------------------------------------------
+
+    def poll(self, now_cycle: int) -> List[RegisteredWrite]:
+        """The paper's per-cycle head check.
+
+        Returns the (possibly empty) list of writes due at ``now_cycle``.
+        In the common case the head lies in the future and this is a single
+        comparison.  When due, all head entries with wakeup <= now are popped
+        in (wakeup, seq) order.  Popping *everything* <= now (rather than == now
+        only) makes the engine robust to coarse stepping, while remaining
+        identical to the paper's behaviour under per-cycle stepping.
+        """
+        self.stats.head_polls += 1
+        if not self._heap or self._heap[0][0] > now_cycle:
+            return []
+        due: List[RegisteredWrite] = []
+        while self._heap and self._heap[0][0] <= now_cycle:
+            due.append(heapq.heappop(self._heap)[2])
+        self.stats.enacted += len(due)
+        return due
+
+    def pop_next_group(self) -> Tuple[Optional[int], List[RegisteredWrite]]:
+        """Event-queue mode: pop the next timestamp group without polling.
+
+        Returns ``(wakeup_cycle, writes)`` for the earliest pending timestamp,
+        or ``(None, [])`` if empty.  Used by the event-driven engine (the
+        paper's §3.2.2 proposed design) and by the vectorized engine.
+        """
+        if not self._heap:
+            return None, []
+        cyc = self._heap[0][0]
+        group: List[RegisteredWrite] = []
+        while self._heap and self._heap[0][0] == cyc:
+            group.append(heapq.heappop(self._heap)[2])
+        self.stats.enacted += len(group)
+        return cyc, group
+
+    # -- inspection (the paper highlights WTT debuggability) ------------------
+
+    def pending(self) -> List[RegisteredWrite]:
+        """All pending writes in chronological order (non-destructive)."""
+        return [w for _, _, w in sorted(self._heap)]

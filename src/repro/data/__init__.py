@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline with host sharding and prefetch."""
+
+from .pipeline import DataConfig, SyntheticLMDataset, prefetch
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "prefetch"]

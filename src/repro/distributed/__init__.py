@@ -1,0 +1,13 @@
+"""Distribution substrate: sharding rules, collectives, ZeRO, remat, PP."""
+
+from .sharding import DEFAULT_RULES, ShardingRules, constrain, param_shardings, resolve_spec, batch_spec
+from .zero import zero1_shardings, zero1_spec
+from .remat import POLICIES, get_policy, maybe_remat
+from .pipeline import bubble_fraction, pipeline_apply, stack_stage_params
+
+__all__ = [
+    "DEFAULT_RULES", "ShardingRules", "constrain", "param_shardings",
+    "resolve_spec", "batch_spec", "zero1_shardings", "zero1_spec",
+    "POLICIES", "get_policy", "maybe_remat",
+    "bubble_fraction", "pipeline_apply", "stack_stage_params",
+]

@@ -1,0 +1,52 @@
+"""Activation-checkpoint (remat) policies.
+
+Named policies keep the perf-iteration log readable: EXPERIMENTS.md §Perf
+references these by name when a hillclimb step changes the remat policy.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+
+__all__ = ["POLICIES", "get_policy"]
+
+
+def _nothing():
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _dots():
+    return jax.checkpoint_policies.dots_saveable
+
+
+def _dots_no_batch():
+    return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+POLICIES: Dict[str, Callable] = {
+    # recompute everything in backward (min memory, max recompute)
+    "full": _nothing,
+    # save matmul outputs (the usual sweet spot for transformer blocks)
+    "dots": _dots,
+    "dots_no_batch": _dots_no_batch,
+    # no remat at all (max memory, zero recompute)
+    "none": None,
+}
+
+
+def get_policy(name: str):
+    if name not in POLICIES:
+        raise KeyError(f"unknown remat policy {name!r}; one of {sorted(POLICIES)}")
+    fn = POLICIES[name]
+    return None if fn is None else fn()
+
+
+def maybe_remat(f, policy_name: str, *, static_argnums=()):
+    """Wrap ``f`` in jax.checkpoint under the named policy ('none' = no-op)."""
+    if policy_name == "none":
+        return f
+    return jax.checkpoint(
+        f, policy=get_policy(policy_name), static_argnums=static_argnums
+    )

@@ -1,0 +1,17 @@
+"""Fault tolerance: failure detection, straggler mitigation, elastic remesh."""
+
+from .resilience import (
+    ElasticMeshManager,
+    HeartbeatMonitor,
+    SimulatedFailure,
+    StragglerMonitor,
+    remesh_pytree,
+)
+
+__all__ = [
+    "ElasticMeshManager",
+    "HeartbeatMonitor",
+    "SimulatedFailure",
+    "StragglerMonitor",
+    "remesh_pytree",
+]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode against ref.py oracles)."""
+
+from . import ops, ref
+from .ops import decode_attention, gemv, gemv_tiles, remote_first_order, rmsnorm
+
+__all__ = ["ops", "ref", "gemv", "gemv_tiles", "decode_attention", "rmsnorm",
+           "remote_first_order"]

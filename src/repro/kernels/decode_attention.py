@@ -1,0 +1,101 @@
+"""Flash-decoding Pallas kernel: one query token vs. a long KV cache.
+
+Grid walks (batch, kv-block); VMEM f32 scratch holds the running
+(max, sum, output) triple per GQA group, merged across KV blocks with the
+standard log-sum-exp rescaling.  Blocks are sized so K/V slabs stream through
+VMEM; on real TPU the sequence axis is the natural split-K axis of
+flash-decoding (parallelized across cores / sequence shards — the
+sequence-parallel decode path of long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref, *, bs):
+    s_blk = pl.program_id(1)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]            # [H, D] (one batch element)
+    k = k_ref[0]            # [bs, KV, D]
+    v = v_ref[0]            # [bs, KV, D]
+    H, D = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    length = len_ref[0]
+
+    qh = q.reshape(KV, rep, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("grd,sgd->grs", qh, k.astype(jnp.float32))  # [KV, rep, bs]
+    pos = s_blk * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    s = jnp.where(pos < length, s, _NEG_INF)
+
+    m_prev = m_ref[...]                      # [KV, rep]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])        # [KV, rep, bs]
+    l_new = l_ref[...] * alpha + p.sum(axis=-1)
+    acc = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "grs,sgd->grd", p, v.astype(jnp.float32)
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(s_blk == pl.num_programs(1) - 1)
+    def _final():
+        o = acc / jnp.maximum(l_new, 1e-20)[..., None]
+        o_ref[0] = o.reshape(H, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,       # [B, H, D]
+    k: jax.Array,       # [B, S, KV, D]
+    v: jax.Array,       # [B, S, KV, D]
+    length: jax.Array,  # i32[] valid cache prefix
+    *,
+    bs: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    bs = min(bs, S)
+    assert S % bs == 0, "kv block must tile the cache"
+    rep = H // KV
+    lens = jnp.broadcast_to(jnp.asarray(length, jnp.int32)[None], (B,))
+
+    grid = (B, S // bs)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, KV, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((KV, rep), jnp.float32),
+            pltpu.VMEM((KV, rep), jnp.float32),
+            pltpu.VMEM((KV, rep, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)
+    return out

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gemv_ref",
+    "gemv_tiles_ref",
+    "decode_attention_ref",
+    "rmsnorm_ref",
+]
+
+
+def gemv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x. a: [M, K]; x: [K, N] -> [M, N] (f32 accumulation)."""
+    return jnp.dot(
+        a.astype(jnp.float32), x.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+def gemv_tiles_ref(a: jax.Array, x: jax.Array, n_dev: int, my_dev: int):
+    """Owner-ordered partial-tile GEMV (fused GEMV+AllReduce compute side).
+
+    Output rows are grouped by owner device; tiles for remote owners come
+    first (paper Fig. 3 lines 2-5), then local tiles (lines 9-12).  The values
+    equal gemv_ref — only the *schedule* differs — so the oracle is the plain
+    product; the kernel's tile-issue order is asserted separately via its
+    progress-counter output.
+    """
+    return gemv_ref(a, x)
+
+
+def decode_attention_ref(
+    q: jax.Array,   # [B, H, D]
+    k: jax.Array,   # [B, S, KV, D]
+    v: jax.Array,   # [B, S, KV, D]
+    length: int,    # valid prefix of the cache
+) -> jax.Array:
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, KV, rep, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qh, k.astype(jnp.float32))
+    mask = (jnp.arange(S) < length)[None, None, None, :]
+    s = jnp.where(mask, s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,168 @@
+"""Roofline table generator: reads results/dryrun/*.json, emits §Roofline.
+
+Per (arch x shape x mesh) cell:
+  compute_s    = flops_per_device / 197e12        (bf16 peak, v5e)
+  memory_s     = bytes_per_device / 819e9         (HBM)
+  collective_s = coll_bytes_per_device / 50e9     (ICI link)
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs usefulness ratio, HBM fit,
+and a one-line "what would move the dominant term" note.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+      [--json results/roofline.json] [--md results/roofline.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.core.predictor import roofline
+from repro.core.topology import Topology, V5E
+
+__all__ = ["build_table", "load_records", "render_markdown"]
+
+_ADVICE = {
+    "compute": (
+        "compute-bound: cut recompute (remat policy) or raise per-chip "
+        "efficiency (larger matmul tiles / fused kernels)"
+    ),
+    "memory": (
+        "HBM-bound: fuse elementwise chains, keep activations bf16, "
+        "shrink optimizer-state traffic (ZeRO already on)"
+    ),
+    "collective": (
+        "collective-bound: reduce-scatter instead of all-reduce for grads, "
+        "bf16/int8 gradient compression, overlap collectives under compute"
+    ),
+}
+
+
+def _topo_for(mesh_name: str) -> Topology:
+    if mesh_name == "multi":
+        return Topology((2, 16, 16), ("pod", "data", "model"), V5E)
+    if mesh_name == "single":
+        return Topology((16, 16), ("data", "model"), V5E)
+    dims = tuple(int(x) for x in mesh_name.split("x"))
+    names = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[
+        len(dims)
+    ]
+    return Topology(dims, names, V5E)
+
+
+def load_records(dir_: str, tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if rec_tag != tag:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def build_table(recs: List[Dict]) -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(
+                {
+                    "arch": r["arch"],
+                    "shape": r["shape"],
+                    "mesh": r["mesh"],
+                    "status": r.get("status"),
+                    "note": r.get("skip_reason", r.get("error", "")),
+                }
+            )
+            continue
+        topo = _topo_for(r["mesh"])
+        terms = roofline(
+            arch=r["arch"],
+            shape=r["shape"],
+            mesh=r["mesh"],
+            topo=topo,
+            hlo_flops_per_device=r["flops_per_device"],
+            hlo_bytes_per_device=r["bytes_per_device"],
+            collective_bytes_per_device=int(r["collective_bytes_per_device"]),
+            model_flops_total=r["model_flops"],
+            bytes_per_device_hbm=int(r.get("hbm_bytes_per_device", 0)),
+        )
+        d = terms.as_dict()
+        d["status"] = "ok"
+        d["note"] = _ADVICE[terms.dominant]
+        d["options"] = r.get("options", {})
+        rows.append(d)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful | roofline_frac | HBM/dev | fits |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"{r.get('status')} | - | - | - | {r.get('note','')[:60]} |"
+            )
+            continue
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {k:.4f} | "
+            "**{dom}** | {u:.2f} | {rf:.3f} | {gb:.1f} GiB | {fit} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=r["mesh"],
+                c=r["compute_s"],
+                m=r["memory_s"],
+                k=r["collective_s"],
+                dom=r["dominant"],
+                u=r["useful_flops_ratio"],
+                rf=r["roofline_fraction"],
+                gb=r["bytes_per_device_hbm"] / 2**30,
+                fit="yes" if r["fits_hbm"] else "NO",
+            )
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", dest="json_out", default="results/roofline.json")
+    ap.add_argument("--md", dest="md_out", default="results/roofline.md")
+    args = ap.parse_args()
+
+    recs = load_records(args.dir, args.tag)
+    rows = build_table(recs)
+    os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    md = render_markdown(rows)
+    with open(args.md_out, "w") as f:
+        f.write(md)
+    print(md)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["collective_s"])
+        print(
+            f"worst roofline fraction: {worst['arch']} x {worst['shape']} "
+            f"({worst['roofline_fraction']:.3f})"
+        )
+        print(
+            f"most collective-bound: {collb['arch']} x {collb['shape']} "
+            f"({collb['collective_s']:.4f}s)"
+        )
+
+
+if __name__ == "__main__":
+    main()

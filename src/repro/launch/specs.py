@@ -1,0 +1,100 @@
+"""ShapeDtypeStruct input stand-ins + sharding resolution for dry-run cells.
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable,
+zero-allocation stand-ins for every input of the cell's step function:
+train/prefill get token (+stub-embedding) batches; decode gets tokens, the
+position scalar, and the full per-layer cache tree sized to the cell's
+seq_len.  ``cache_shardings`` places caches: batch over data, KV heads over
+model, and — when batch is unshardable (long_500k's batch=1) — the cache
+*sequence* dim over data (sequence-parallel flash decoding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import DEFAULT_RULES, param_shardings
+from repro.models import Model
+
+__all__ = ["input_specs", "cache_shardings", "batch_shardings", "CellSpec"]
+
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    """Stand-ins for one cell's step inputs (no device allocation)."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    has_frontend = cfg.frontend != "none"
+    if shape.mode == "train":
+        out: Dict[str, Any] = {
+            "tokens": _tok((B, S)),
+            "labels": _tok((B, S)),
+        }
+        if has_frontend:
+            # modality stub: precomputed frame/patch embeddings
+            out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.param_dtype)
+        return out
+    if shape.mode == "prefill":
+        out = {"tokens": _tok((B, S))}
+        if has_frontend:
+            out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.param_dtype)
+        return out
+    # decode: one new token against a cache of S resident tokens
+    out = {
+        "tokens": _tok((B,)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": model.abstract_caches(B, S),
+    }
+    if has_frontend:
+        out["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cfg.param_dtype)
+    return out
+
+
+def _cache_leaf_spec(shape: Tuple[int, ...], mesh: Mesh, batch: int) -> P:
+    """Heuristic cache placement (documented in DESIGN.md §Sharding)."""
+    dsz = mesh.shape.get("data", 1)
+    msz = mesh.shape.get("model", 1)
+    parts = [None] * len(shape)
+    batch_sharded = False
+    if len(shape) >= 1 and shape[0] == batch and batch % dsz == 0 and dsz > 1:
+        parts[0] = "data"
+        batch_sharded = True
+    # model axis: ONLY the heads-like dim (position 2 of 4-D caches: KV heads
+    # for attention, head groups for SSM state).  Sharding seq or head_dim on
+    # model forces SPMD reshards at every attention contraction (measured:
+    # "involuntary full rematerialization" warnings) — replicate instead.
+    if len(shape) >= 4 and msz > 1 and shape[2] % msz == 0 and shape[2] >= msz:
+        parts[2] = "model"
+    elif len(shape) == 3 and msz > 1 and shape[1] % msz == 0 and shape[1] >= msz:
+        # MLA latent caches (B, S, r): split-S flash decoding over the model
+        # axis — heads are absorbed away, so S is the only parallel dim left
+        parts[1] = "model"
+    if not batch_sharded and len(shape) >= 3 and dsz > 1:
+        # sequence-parallel fallback (long_500k): shard the seq dim on data
+        if shape[1] % dsz == 0 and shape[1] >= dsz:
+            parts[1] = "data"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def cache_shardings(model: Model, mesh: Mesh, batch: int, max_len: int):
+    ab = model.abstract_caches(batch, max_len)
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _cache_leaf_spec(l.shape, mesh, batch)), ab
+    )
+
+
+def batch_shardings(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    spec = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(mesh, P(spec))

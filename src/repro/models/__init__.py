@@ -1,0 +1,9 @@
+"""Model zoo: shared components + the ten assigned architectures."""
+
+from .common import ModelConfig, ParamSpec, abstract, count_params, logical_axes, materialize
+from .model import Model, Stage, build_plan
+
+__all__ = [
+    "ModelConfig", "ParamSpec", "abstract", "count_params",
+    "logical_axes", "materialize", "Model", "Stage", "build_plan",
+]

@@ -1,0 +1,395 @@
+"""Attention variants: GQA (full / sliding-window), MLA, RoPE / M-RoPE.
+
+All attention is computed chunked over the KV axis (flash-attention style
+running log-sum-exp) so prefill at 32k and training at 4k never materialize
+S x S score matrices; decode (q_len==1) uses the direct path, which shards
+cleanly over a sequence-parallel KV cache (GSPMD inserts the partial-softmax
+reductions).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, rms_norm
+
+__all__ = [
+    "attention_specs",
+    "attention_apply",
+    "attention_decode",
+    "init_kv_cache",
+    "rope_cos_sin",
+    "apply_rope",
+]
+
+_NEG_INF = -2.0e38
+
+
+def _anchor(x, mesh, *parts):
+    """with_sharding_constraint with axis-presence + divisibility guards.
+
+    Anchors activation layouts so GSPMD keeps one layout through the chunked
+    attention scan instead of resharding the carry every iteration (measured:
+    one all-reduce per chunk per layer without this — EXPERIMENTS.md §Perf).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    clean = []
+    for dim, ax in zip(x.shape, parts):
+        if ax is None or ax not in mesh.shape or dim % mesh.shape[ax] != 0:
+            clean.append(None)
+        else:
+            clean.append(ax)
+    clean += [None] * (x.ndim - len(clean))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean))
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL style M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(
+    positions: jax.Array,  # i32[B, S] or i32[3, B, S] for mrope
+    head_dim: int,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    else:
+        # M-RoPE: rotary dims are split into (temporal, h, w) sections; each
+        # section rotates with its own position stream.  With identical
+        # streams (text tokens) this reduces to standard RoPE.
+        assert mrope_sections is not None and sum(mrope_sections) == half
+        parts = []
+        off = 0
+        for sec, pos in zip(mrope_sections, positions):
+            parts.append(pos[..., None].astype(jnp.float32) * freqs[off : off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [B, S, D/2] (broadcast over heads)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    pd = cfg.param_dtype
+    if cfg.attn_kind == "mla":
+        r, rd = cfg.mla_kv_rank, cfg.mla_rope_dim
+        specs: Dict[str, ParamSpec] = {
+            "w_dkv": ParamSpec((d, r + rd), ("embed", "rank"), pd),
+            "w_uk": ParamSpec((r, cfg.n_heads * hd), ("rank", "heads"), pd),
+            "w_uv": ParamSpec((r, cfg.n_heads * hd), ("rank", "heads"), pd),
+            "w_o": ParamSpec((cfg.n_heads * hd, d), ("heads", "embed"), pd),
+            "norm_kv": ParamSpec((r,), ("rank",), pd, init="zeros"),
+        }
+        if cfg.mla_q_rank:
+            specs["w_dq"] = ParamSpec((d, cfg.mla_q_rank), ("embed", "rank"), pd)
+            specs["w_uq"] = ParamSpec(
+                (cfg.mla_q_rank, cfg.n_heads * (hd + rd)), ("rank", "heads"), pd
+            )
+            specs["norm_q"] = ParamSpec(
+                (cfg.mla_q_rank,), ("rank",), pd, init="zeros"
+            )
+        else:
+            specs["w_q"] = ParamSpec(
+                (d, cfg.n_heads * (hd + rd)), ("embed", "heads"), pd
+            )
+        return specs
+    return {
+        "w_q": ParamSpec((d, cfg.n_heads * hd), ("embed", "heads"), pd),
+        "w_k": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv"), pd),
+        "w_v": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv"), pd),
+        "w_o": ParamSpec((cfg.n_heads * hd, d), ("heads", "embed"), pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) causal attention
+# ---------------------------------------------------------------------------
+
+
+def _chunked_attention(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, S, KV, D]
+    v: jax.Array,  # [B, S, KV, D]
+    *,
+    window: int = 0,  # 0 => full causal; >0 => sliding window
+    chunk: int = 1024,
+    mesh=None,
+) -> jax.Array:
+    B, S, H, Dk = q.shape
+    KV = k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(Dk)
+    chunk = min(chunk, S)
+    n_chunks = math.ceil(S / chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, Dk)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv)
+    q_pos = jnp.arange(S)
+
+    qh = (q * scale).reshape(B, S, KV, rep, Dk)
+
+    def body(carry, inputs):
+        m, l, o = carry
+        kci, vci, ci = inputs
+        k_pos = ci * chunk + jnp.arange(chunk)
+        # scores: [B, S, KV, rep, chunk]
+        s = jnp.einsum(
+            "bsgrd,bcgd->bsgrc", qh, kci, preferred_element_type=jnp.float32
+        )
+        causal = k_pos[None, :] <= q_pos[:, None]
+        valid = k_pos[None, :] < S
+        mask = causal & valid
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bsgrc,bcgd->bsgrd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, S, KV, rep), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, rep), jnp.float32)
+    o0 = jnp.zeros((B, S, KV, rep, Dv), jnp.float32)
+    if mesh is not None and globals().get("_ANCHOR_CARRY", True):
+        m0 = _anchor(m0, mesh, "data", None, "model")
+        l0 = _anchor(l0, mesh, "data", None, "model")
+        o0 = _anchor(o0, mesh, "data", None, "model")
+    (m, l, o), _ = jax.lax.scan(
+        body,
+        (m0, l0, o0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)),
+    )
+    out = o / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, p, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    if cfg.attn_kind == "mla":
+        r, rd = cfg.mla_kv_rank, cfg.mla_rope_dim
+        ckv_pe = x @ p["w_dkv"]
+        c_kv = rms_norm(ckv_pe[..., :r], p["norm_kv"], cfg.norm_eps)
+        k_pe = ckv_pe[..., r:]
+        if cfg.mla_q_rank:
+            cq = rms_norm(x @ p["w_dq"], p["norm_q"], cfg.norm_eps)
+            q_full = (cq @ p["w_uq"]).reshape(B, S, cfg.n_heads, hd + rd)
+        else:
+            q_full = (x @ p["w_q"]).reshape(B, S, cfg.n_heads, hd + rd)
+        q_nope, q_pe = q_full[..., :hd], q_full[..., hd:]
+        cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+        q_pe = apply_rope(q_pe, cos, sin)
+        k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)
+        # expand latent to per-head K/V (naive MLA; the absorbed form is a
+        # perf optimization recorded in EXPERIMENTS.md)
+        k_nope = (c_kv @ p["w_uk"]).reshape(B, S, cfg.n_heads, hd)
+        v = (c_kv @ p["w_uv"]).reshape(B, S, cfg.n_heads, hd)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, cfg.n_heads, rd))], axis=-1)
+        return q, k, v, (c_kv, k_pe[:, :, 0, :])
+    q = (x @ p["w_q"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["w_k"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.rope_kind == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        cos, sin = rope_cos_sin(pos3, hd, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_kind == "rope":
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    else:
+        cos = sin = None
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v, (k, v)
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,          # [B, S, d_model]
+    positions: jax.Array,  # i32[B, S]
+    *,
+    is_global: jax.Array | bool = True,
+    chunk: int = 1024,
+    mesh=None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (attn_out [B,S,d], cache_entry (k,v) or (c_kv,k_pe))."""
+    q, k, v, cache = _project_qkv(cfg, p, x, positions)
+    amesh = mesh if cfg.attn_sharding_constraints else None
+    if amesh is not None:
+        if globals().get("_ANCHOR_Q", True):
+            q = _anchor(q, amesh, "data", None, "model")
+        k = _anchor(k, amesh, "data", None, "model")
+        v = _anchor(v, amesh, "data", None, "model")
+    if cfg.attn_kind == "sliding":
+        # traced flag: compute both windowed and full, select (keeps the layer
+        # scan homogeneous; the unused branch is DCE'd when the flag is static)
+        if isinstance(is_global, bool):
+            out = _chunked_attention(
+                q, k, v, window=0 if is_global else cfg.sliding_window,
+                chunk=chunk, mesh=amesh,
+            )
+        else:
+            out_local = _chunked_attention(
+                q, k, v, window=cfg.sliding_window, chunk=chunk, mesh=amesh
+            )
+            out_global = _chunked_attention(q, k, v, window=0, chunk=chunk,
+                                            mesh=amesh)
+            out = jnp.where(is_global, out_global, out_local)
+    else:
+        out = _chunked_attention(q, k, v, window=0, chunk=chunk, mesh=amesh)
+    B, S = x.shape[:2]
+    y = out.reshape(B, S, -1) @ p["w_o"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, layer_idx: int, dtype=None
+) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.param_dtype
+    if cfg.attn_kind == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.mla_kv_rank), dtype),
+            "k_pe": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype),
+        }
+    if cfg.attn_kind == "sliding" and not cfg.is_global_attn(layer_idx):
+        max_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def _cache_write(cache_arr: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one token at (ring-buffered) position ``pos``."""
+    L = cache_arr.shape[1]
+    idx = jnp.mod(pos, L)
+    return cache_arr.at[:, idx].set(new.astype(cache_arr.dtype))
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,      # [B, 1, d_model]
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,    # i32[] current position (tokens already in cache)
+    *,
+    layer_idx: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    hd = cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new, extras = _project_qkv(cfg, p, x, positions)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    if cfg.attn_kind == "mla":
+        c_kv_new, k_pe_new = extras
+        cache = {
+            "c_kv": _cache_write(cache["c_kv"], c_kv_new[:, 0], pos),
+            "k_pe": _cache_write(cache["k_pe"], k_pe_new[:, 0], pos),
+        }
+        S = cache["c_kv"].shape[1]
+        if cfg.mla_absorbed_decode:
+            # absorbed MLA (EXPERIMENTS.md §Perf H3): score and attend in
+            # LATENT space — w_uk folds into the query, w_uv into the output;
+            # the per-token (B,S,H,hd) K/V expansion never materializes.
+            r, rd = cfg.mla_kv_rank, cfg.mla_rope_dim
+            H = cfg.n_heads
+            q_nope, q_pe = q[..., :hd], q[..., hd:]
+            w_uk = p["w_uk"].reshape(r, H, hd)
+            w_uv = p["w_uv"].reshape(r, H, hd)
+            q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+            sc = 1.0 / math.sqrt(hd + rd)
+            s = (
+                jnp.einsum("bqhr,bsr->bhqs", q_abs, cache["c_kv"],
+                           preferred_element_type=jnp.float32)
+                + jnp.einsum("bqhp,bsp->bhqs", q_pe, cache["k_pe"],
+                             preferred_element_type=jnp.float32)
+            ) * sc
+            valid = jnp.arange(S)[None, :] <= pos
+            s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+            w = jax.nn.softmax(s, axis=-1)
+            o_lat = jnp.einsum(
+                "bhqs,bsr->bqhr", w.astype(cache["c_kv"].dtype), cache["c_kv"]
+            )
+            o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+            y = o.reshape(B, 1, -1) @ p["w_o"]
+            return y, cache
+        k_nope = (cache["c_kv"] @ p["w_uk"]).reshape(B, S, cfg.n_heads, hd)
+        v = (cache["c_kv"] @ p["w_uv"]).reshape(B, S, cfg.n_heads, hd)
+        k_pe = jnp.broadcast_to(
+            cache["k_pe"][:, :, None, :], (B, S, cfg.n_heads, cfg.mla_rope_dim)
+        )
+        k = jnp.concatenate([k_nope, k_pe], axis=-1)
+        valid = jnp.arange(S)[None, :] <= pos
+        win = 0
+    else:
+        kc = _cache_write(cache["k"], k_new[:, 0], pos)
+        vc = _cache_write(cache["v"], v_new[:, 0], pos)
+        cache = {"k": kc, "v": vc}
+        k, v = kc, vc
+        S = k.shape[1]
+        is_local = cfg.attn_kind == "sliding" and not cfg.is_global_attn(layer_idx)
+        if is_local:
+            # ring buffer: every resident slot with slot-age < window is valid
+            slot = jnp.arange(S)
+            written = jnp.where(pos + 1 < S, slot <= pos, True)
+            valid = written[None, :]
+        else:
+            valid = (jnp.arange(S)[None, :] <= pos)
+        win = 0
+
+    rep = q.shape[2] // k.shape[2]
+    qh = q.reshape(B, 1, k.shape[2], rep, q.shape[-1]) * scale
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qh, k, preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bsgd->bqgrd", w.astype(v.dtype), v)
+    y = o.reshape(B, 1, -1) @ p["w_o"]
+    return y, cache

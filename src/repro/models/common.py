@@ -1,0 +1,249 @@
+"""Shared model-definition machinery.
+
+Every architecture is described by a :class:`ModelConfig`; parameters are
+declared as :class:`ParamSpec` trees (shape + dtype + *logical axis names* +
+initializer) and materialized three ways:
+
+* ``materialize(spec, rng)``        -> real arrays (training / smoke tests)
+* ``abstract(spec)``                -> ShapeDtypeStructs (multi-pod dry-run)
+* ``logical_axes(spec)``            -> axis-name tuples (sharding rules)
+
+Logical axis names are resolved to mesh axes by ``repro.distributed.sharding``
+with automatic divisibility fallback, so tiny smoke configs and the production
+mesh share one model definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "materialize",
+    "abstract",
+    "logical_axes",
+    "stack_specs",
+    "tree_slice",
+    "rms_norm",
+    "count_params",
+    "DEFAULT_PARAM_DTYPE",
+]
+
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Superset config covering all ten assigned architectures."""
+
+    name: str = "model"
+    family: str = "dense"          # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab: int = 1024
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+    max_seq_len: int = 8192
+    rope_theta: float = 10_000.0
+
+    # attention structure
+    attn_kind: str = "full"        # full | sliding | mla
+    sliding_window: int = 1024
+    global_every: int = 0          # e.g. 6 => layers 5, 11, ... are global
+    rope_kind: str = "rope"        # rope | mrope | none
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+
+    # MLA (minicpm3 / kimi-k2)
+    mla_kv_rank: int = 256
+    mla_q_rank: int = 0            # 0 => no q compression
+    mla_rope_dim: int = 32
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_every: int = 1             # every k-th layer is MoE (1 = all)
+    first_dense_layers: int = 0    # leading dense layers (kimi-k2 style)
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    attn_block_every: int = 0      # zamba2: shared attn block cadence
+
+    # xLSTM
+    xlstm_pattern: str = ""        # e.g. "msms..." per layer; empty = n/a
+
+    # frontends (vlm / audio): backbone consumes precomputed embeddings
+    frontend: str = "none"         # none | vision_stub | audio_stub
+    frontend_dim: int = 0          # embedding dim delivered by the stub
+
+    # numerics
+    scale_embed: bool = False      # gemma-style sqrt(d) embedding scaling
+    mlp_act: str = "silu"          # silu | gelu
+    param_dtype: Any = DEFAULT_PARAM_DTYPE
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # long-context policy (assignment: skip long_500k for pure full attention)
+    supports_500k: bool = False
+
+    # --- perf options (EXPERIMENTS.md §Perf; defaults = paper-faithful
+    # baseline, flags flipped per hillclimb iteration) ---
+    attn_sharding_constraints: bool = False  # anchor q/k/v + chunk-scan carry
+    mla_absorbed_decode: bool = False        # score/output in latent space
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(1, self.n_kv_heads)
+
+    def layer_kind(self, i: int) -> str:
+        """What block sits at depth i (resolves hybrid/moe/sliding patterns)."""
+        if self.family == "ssm" and self.xlstm_pattern:
+            return "xlstm_" + self.xlstm_pattern[i % len(self.xlstm_pattern)]
+        if self.family == "hybrid":
+            return "mamba"
+        if self.n_experts > 0:
+            if i < self.first_dense_layers or (i % self.moe_every) != (
+                self.moe_every - 1
+            ):
+                # note: with moe_every=1 every layer is MoE after the leading
+                # dense layers
+                if self.moe_every == 1 and i >= self.first_dense_layers:
+                    return "moe"
+                return "dense"
+            return "moe"
+        return "dense"
+
+    def is_global_attn(self, i: int) -> bool:
+        if self.attn_kind != "sliding" or self.global_every <= 0:
+            return True
+        return (i % self.global_every) == (self.global_every - 1)
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % max(1, self.n_kv_heads) == 0
+        if self.n_experts:
+            assert 0 < self.experts_per_token <= self.n_experts
+        return self
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = DEFAULT_PARAM_DTYPE
+    init: str = "normal"     # normal | zeros | ones | embed
+    scale: Optional[float] = None  # None => 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(spec_tree, rng: jax.Array):
+    """Instantiate real parameters from a spec tree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = s.scale if s.scale is not None else 1.0 / math.sqrt(fan_in)
+            if s.init == "embed":
+                scale = s.scale if s.scale is not None else 1.0
+            v = (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(s.dtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(spec_tree):
+    """ShapeDtypeStruct tree (no allocation) — the dry-run path."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda s: tuple(s.axes), spec_tree, is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layers dim to every spec (for jax.lax.scan)."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            shape=(n, *s.shape),
+            axes=(axis_name, *s.axes),
+            dtype=s.dtype,
+            init=s.init,
+            scale=s.scale,
+        ),
+        spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+def tree_slice(tree, i):
+    """Slice layer ``i`` out of a stacked param tree (inside scan bodies)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in (s.shape if _is_spec(s) else s.shape):
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)

@@ -1,0 +1,28 @@
+"""Gated MLP (SwiGLU / GeGLU) used by every dense block."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+__all__ = ["mlp_specs", "mlp_apply"]
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "w_gate": ParamSpec((d, ff), ("embed", "mlp"), pd),
+        "w_up": ParamSpec((d, ff), ("embed", "mlp"), pd),
+        "w_down": ParamSpec((ff, d), ("mlp", "embed"), pd),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+    g = act(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,463 @@
+"""Model assembly: block definitions, layer-stack plans, forward/prefill/decode.
+
+A model is a sequence of *stages* derived from its :class:`ModelConfig`:
+
+* ``scan``   — N homogeneous layers, parameters stacked on a leading
+               ``layers`` dim and executed with ``jax.lax.scan`` (keeps HLO
+               compact for 62-layer production configs);
+* ``single`` — one layer with its own parameters (xLSTM's m/s alternation);
+* ``shared`` — one layer whose parameters live once at the top level and are
+               re-applied at several depths (zamba2's shared attention block).
+
+Train-time forward uses the scan path; serving (prefill + decode) walks
+layers in a Python loop so per-layer caches may be heterogeneous (full KV,
+ring-buffered sliding KV, MLA latents, SSM/xLSTM states).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_apply,
+    attention_decode,
+    attention_specs,
+    init_kv_cache,
+)
+from .common import (
+    ModelConfig,
+    ParamSpec,
+    abstract,
+    count_params,
+    logical_axes,
+    materialize,
+    rms_norm,
+    stack_specs,
+    tree_slice,
+)
+from .mlp import mlp_apply, mlp_specs
+from .moe import moe_apply, moe_specs
+from .ssm import init_ssm_state, mamba_apply, mamba_decode, mamba_specs
+from .xlstm import (
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_specs,
+    slstm_apply,
+    slstm_decode,
+    slstm_specs,
+)
+
+__all__ = ["Stage", "build_plan", "Model"]
+
+
+@dataclass(frozen=True)
+class Stage:
+    kind: str          # scan | single | shared
+    block: str         # dense | moe | mamba | xlstm_m | xlstm_s
+    n: int             # layers in this stage (1 for single/shared)
+    layer_offset: int  # absolute index of the first layer in this stage
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+def build_plan(cfg: ModelConfig) -> List[Stage]:
+    L = cfg.n_layers
+    if cfg.family == "hybrid" and cfg.attn_block_every > 0:
+        stages: List[Stage] = []
+        off = 0
+        while off < L:
+            n = min(cfg.attn_block_every, L - off)
+            stages.append(Stage("scan", "mamba", n, off))
+            off += n
+            if off < L or n == cfg.attn_block_every:
+                # zamba2: the SAME transformer block after every mamba group
+                stages.append(Stage("shared", "dense", 1, off))
+        return stages
+    if cfg.family == "ssm" and cfg.xlstm_pattern:
+        return [
+            Stage("single", "xlstm_" + cfg.xlstm_pattern[i % len(cfg.xlstm_pattern)], 1, i)
+            for i in range(L)
+        ]
+    if cfg.n_experts > 0:
+        fd = cfg.first_dense_layers
+        stages = []
+        if fd:
+            stages.append(Stage("scan", "dense", fd, 0))
+        stages.append(Stage("scan", "moe", L - fd, fd))
+        return stages
+    return [Stage("scan", "dense", L, 0)]
+
+
+def _block_specs(cfg: ModelConfig, block: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    ln = lambda: ParamSpec((d,), ("embed",), pd, init="zeros")  # noqa: E731
+    if block == "dense":
+        return {"ln1": ln(), "attn": attention_specs(cfg), "ln2": ln(),
+                "mlp": mlp_specs(cfg)}
+    if block == "moe":
+        return {"ln1": ln(), "attn": attention_specs(cfg), "ln2": ln(),
+                "moe": moe_specs(cfg)}
+    if block == "mamba":
+        return {"ln1": ln(), "mamba": mamba_specs(cfg)}
+    if block == "xlstm_m":
+        return {"ln1": ln(), "cell": mlstm_specs(cfg)}
+    if block == "xlstm_s":
+        return {"ln1": ln(), "cell": slstm_specs(cfg)}
+    raise ValueError(f"unknown block {block!r}")
+
+
+_ZERO_AUX = {"moe_load_balance": 0.0, "moe_z": 0.0, "moe_dropped": 0.0}
+
+
+def _moe_dispatch(cfg, p, h, mesh):
+    from .moe_ep import ep_applicable, moe_apply_ep
+
+    if ep_applicable(cfg, mesh):
+        return moe_apply_ep(cfg, p, h, mesh)
+    y, aux = moe_apply(cfg, p, h)
+    aux.setdefault("moe_dropped", jnp.float32(0.0))
+    return y, aux
+
+
+def _block_apply(cfg, block, p, x, positions, is_global, mesh=None):
+    aux = {k: jnp.float32(0.0) for k in _ZERO_AUX}
+    if block in ("dense", "moe"):
+        a, _ = attention_apply(
+            cfg, p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            is_global=is_global, mesh=mesh,
+        )
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if block == "moe":
+            y, aux = _moe_dispatch(cfg, p["moe"], h, mesh)
+            aux = {**{k: jnp.float32(0.0) for k in _ZERO_AUX}, **aux}
+        else:
+            y = mlp_apply(cfg, p["mlp"], h)
+        return x + y, aux
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if block == "mamba":
+        return x + mamba_apply(cfg, p["mamba"], h), aux
+    if block == "xlstm_m":
+        return x + mlstm_apply(cfg, p["cell"], h), aux
+    if block == "xlstm_s":
+        return x + slstm_apply(cfg, p["cell"], h), aux
+    raise ValueError(block)
+
+
+# ---------------------------------------------------------------------------
+# the model object
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Functional model wrapper: specs + pure apply functions.
+
+    ``mesh`` (optional) enables manual-collective paths (expert-parallel MoE
+    via shard_map); without it everything lowers through GSPMD alone.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg.validate()
+        self.mesh = mesh
+        self.plan = build_plan(cfg)
+
+    # -- parameters -----------------------------------------------------------
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec(
+                (cfg.vocab, cfg.d_model), ("vocab", "embed"), cfg.param_dtype,
+                init="embed", scale=0.02,
+            ),
+            "final_norm": ParamSpec(
+                (cfg.d_model,), ("embed",), cfg.param_dtype, init="zeros"
+            ),
+            "stages": [],
+        }
+        need_shared = False
+        for st in self.plan:
+            if st.kind == "scan":
+                specs["stages"].append(stack_specs(_block_specs(cfg, st.block), st.n))
+            elif st.kind == "single":
+                specs["stages"].append(_block_specs(cfg, st.block))
+            else:  # shared
+                specs["stages"].append({})  # parameters live under "shared"
+                need_shared = True
+        if need_shared:
+            specs["shared"] = _block_specs(cfg, "dense")
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec(
+                (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.param_dtype,
+                scale=0.02,
+            )
+        return specs
+
+    def init(self, rng: jax.Array):
+        return materialize(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract(self.param_specs())
+
+    def param_axes(self):
+        return logical_axes(self.param_specs())
+
+    def n_params(self) -> int:
+        return count_params(self.param_specs())
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.n_experts == 0:
+            return total
+        moe_layers = cfg.n_layers - cfg.first_dense_layers
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = moe_layers * (cfg.n_experts - cfg.experts_per_token) * per_expert
+        return total - inactive
+
+    # -- embedding ------------------------------------------------------------
+
+    def _embed(self, params, tokens=None, embeds=None):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(cfg.param_dtype)
+        else:
+            x = params["embed"][tokens]
+        if cfg.scale_embed:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return x
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ w).astype(jnp.float32)
+        if cfg.logit_softcap > 0:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        return logits
+
+    # -- training / full forward ----------------------------------------------
+
+    def forward(
+        self,
+        params,
+        tokens: Optional[jax.Array] = None,
+        *,
+        embeds: Optional[jax.Array] = None,
+        remat: bool = False,
+        remat_policy: str = "full",
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Full causal forward -> (logits [B,S,V], aux losses)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        aux_total = {k: jnp.float32(0.0) for k in _ZERO_AUX}
+
+        for st, p_st in zip(self.plan, params["stages"]):
+            if st.kind == "scan":
+                flags = jnp.array(
+                    [cfg.is_global_attn(st.layer_offset + i) for i in range(st.n)]
+                )
+
+                import functools
+
+                base = functools.partial(
+                    _block_apply, cfg, st.block, mesh=self.mesh
+                )
+                if remat:
+                    from repro.distributed.remat import get_policy
+
+                    fn = jax.checkpoint(base, policy=get_policy(remat_policy))
+                else:
+                    fn = base
+
+                def body(carry, xs, fn=fn):
+                    x_c, aux_c = carry
+                    p_l, flag = xs
+                    x_c, aux = fn(p_l, x_c, positions, flag)
+                    aux_c = {k: aux_c[k] + aux[k] for k in aux_c}
+                    return (x_c, aux_c), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    body, (x, aux_total), (p_st, flags)
+                )
+            else:
+                p_l = params["shared"] if st.kind == "shared" else p_st
+                x, aux = _block_apply(
+                    cfg, st.block, p_l, x, positions,
+                    cfg.is_global_attn(st.layer_offset), mesh=self.mesh,
+                )
+                aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+        return self._head(params, x), aux_total
+
+    def loss_fn(
+        self,
+        params,
+        tokens: Optional[jax.Array] = None,
+        labels: Optional[jax.Array] = None,
+        *,
+        embeds: Optional[jax.Array] = None,
+        remat: bool = False,
+        remat_policy: str = "full",
+        moe_loss_weight: float = 0.01,
+        z_loss_weight: float = 1e-4,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(
+            params, tokens, embeds=embeds, remat=remat,
+            remat_policy=remat_policy,
+        )
+        if labels is None:
+            labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = jnp.ones_like(nll)
+        ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        total = (
+            ce
+            + moe_loss_weight * aux["moe_load_balance"]
+            + z_loss_weight * aux["moe_z"]
+        )
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    # -- serving ----------------------------------------------------------------
+
+    def _layer_blocks(self) -> List[Tuple[str, Stage, int]]:
+        """(block_kind, stage, index_within_stage) per absolute layer."""
+        out = []
+        for st in self.plan:
+            for i in range(st.n):
+                out.append((st.block, st, i))
+        return out
+
+    def _layer_params(self, params, st: Stage, i: int):
+        p_st = params["stages"][self.plan.index(st)]
+        if st.kind == "scan":
+            return tree_slice(p_st, i)
+        if st.kind == "shared":
+            return params["shared"]
+        return p_st
+
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        caches = []
+        for li, (block, st, i) in enumerate(self._layer_blocks()):
+            if block in ("dense", "moe"):
+                caches.append(init_kv_cache(cfg, batch, max_len, li, dtype))
+            elif block == "mamba":
+                caches.append(init_ssm_state(cfg, batch))
+            elif block == "xlstm_m":
+                caches.append(init_mlstm_state(cfg, batch))
+            elif block == "xlstm_s":
+                caches.append(init_slstm_state(cfg, batch))
+        return caches
+
+    def abstract_caches(self, batch: int, max_len: int, dtype=None):
+        return jax.eval_shape(lambda: self.init_caches(batch, max_len, dtype))
+
+    def prefill(self, params, tokens=None, *, embeds=None):
+        """Process a full prompt; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        caches = []
+        for li, (block, st, i) in enumerate(self._layer_blocks()):
+            p_l = self._layer_params(params, st, i)
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            if block in ("dense", "moe"):
+                a, kv = attention_apply(
+                    cfg, p_l["attn"], h, positions,
+                    is_global=cfg.is_global_attn(li), mesh=self.mesh,
+                )
+                caches.append(self._prefill_cache(kv, li, S))
+                x = x + a
+                h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+                if block == "moe":
+                    y, _ = _moe_dispatch(cfg, p_l["moe"], h2, self.mesh)
+                else:
+                    y = mlp_apply(cfg, p_l["mlp"], h2)
+                x = x + y
+            elif block == "mamba":
+                y, state = mamba_apply(cfg, p_l["mamba"], h, return_state=True)
+                caches.append(state)
+                x = x + y
+            elif block == "xlstm_m":
+                y, state = mlstm_apply(cfg, p_l["cell"], h, return_state=True)
+                caches.append(state)
+                x = x + y
+            elif block == "xlstm_s":
+                y, state = slstm_apply(cfg, p_l["cell"], h, return_state=True)
+                caches.append(state)
+                x = x + y
+        logits = self._head(params, x[:, -1:, :])
+        return logits[:, 0, :], caches
+
+    def _prefill_cache(self, kv, layer_idx: int, S: int):
+        cfg = self.cfg
+        if cfg.attn_kind == "mla":
+            c_kv, k_pe = kv
+            return {"c_kv": c_kv, "k_pe": k_pe}
+        k, v = kv
+        if cfg.attn_kind == "sliding" and not cfg.is_global_attn(layer_idx):
+            w = min(cfg.sliding_window, S)
+            idx = (jnp.arange(S - w, S)) % cfg.sliding_window
+            kc = jnp.zeros((k.shape[0], min(cfg.sliding_window, S), *k.shape[2:]),
+                           k.dtype).at[:, idx].set(k[:, S - w :])
+            vc = jnp.zeros_like(kc).at[:, idx].set(v[:, S - w :])
+            return {"k": kc, "v": vc}
+        return {"k": k, "v": v}
+
+    def decode_step(self, params, caches, tokens, pos, *, embeds=None):
+        """One token for every sequence in the batch.
+
+        tokens: i32[B]; pos: i32[] tokens already in the cache.
+        Returns (logits [B, V], new caches).
+        """
+        cfg = self.cfg
+        x = self._embed(
+            params,
+            tokens[:, None] if tokens is not None else None,
+            embeds,
+        )
+        new_caches = []
+        for li, (block, st, i) in enumerate(self._layer_blocks()):
+            p_l = self._layer_params(params, st, i)
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            if block in ("dense", "moe"):
+                a, cache = attention_decode(
+                    cfg, p_l["attn"], h, caches[li], pos, layer_idx=li
+                )
+                x = x + a
+                h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+                if block == "moe":
+                    y, _ = _moe_dispatch(cfg, p_l["moe"], h2, self.mesh)
+                else:
+                    y = mlp_apply(cfg, p_l["mlp"], h2)
+                x = x + y
+            elif block == "mamba":
+                y, cache = mamba_decode(cfg, p_l["mamba"], h, caches[li])
+                x = x + y
+            elif block == "xlstm_m":
+                y, cache = mlstm_decode(cfg, p_l["cell"], h, caches[li])
+                x = x + y
+            elif block == "xlstm_s":
+                y, cache = slstm_decode(cfg, p_l["cell"], h, caches[li])
+                x = x + y
+            new_caches.append(cache)
+        logits = self._head(params, x)
+        return logits[:, 0, :], new_caches

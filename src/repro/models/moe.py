@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer (OLMoE / Kimi-K2-style top-k routing).
+
+Default compute path is sort + grouped-GEMM via ``jax.lax.ragged_dot``
+(dropless; no (T, E, C) one-hot dispatch tensors, which do not fit memory at
+production scale).  Expert weights carry the ``experts`` logical axis so the
+sharding rules place them expert-parallel on the mesh's model axis; token
+routing across expert shards then lowers to all-to-alls — precisely the
+GEMM+All-to-All pattern the paper names as Eidola's MoE use case.
+
+Router aux losses (load-balance + z-loss) are returned for the train loop.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = cfg.param_dtype
+    specs = {
+        "router": ParamSpec((d, E), ("embed", "experts_logits"), jnp.float32),
+        "w_gate": ParamSpec((E, d, ff), ("experts", "embed", "expert_mlp"), pd),
+        "w_up": ParamSpec((E, d, ff), ("experts", "embed", "expert_mlp"), pd),
+        "w_down": ParamSpec((E, ff, d), ("experts", "expert_mlp", "embed"), pd),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        specs.update(
+            {
+                "sh_gate": ParamSpec((d, sff), ("embed", "mlp"), pd),
+                "sh_up": ParamSpec((d, sff), ("embed", "mlp"), pd),
+                "sh_down": ParamSpec((sff, d), ("mlp", "embed"), pd),
+            }
+        )
+    return specs
+
+
+def _router(cfg: ModelConfig, p, x2d: jax.Array):
+    """top-k routing: returns (indices [T,k], weights [T,k], aux losses)."""
+    logits = (x2d.astype(jnp.float32)) @ p["router"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance loss (Switch-style): E * sum(f_e * p_e)
+    E = cfg.n_experts
+    density = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    density = density / jnp.maximum(density.sum(), 1.0)
+    p_mean = probs.mean(axis=0)
+    lb_loss = E * jnp.sum(density * p_mean)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return idx, weights, {"moe_load_balance": lb_loss, "moe_z": z_loss}
+
+
+def _grouped_ffn(cfg: ModelConfig, p, xs: jax.Array, group_sizes: jax.Array):
+    """Per-expert gated MLP on expert-sorted tokens via grouped GEMM."""
+    act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    return jax.lax.ragged_dot((act(g) * u).astype(xs.dtype), p["w_down"], group_sizes)
+
+
+def moe_apply(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, d] -> (y, aux_losses)."""
+    B, S, d = x.shape
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    k = cfg.experts_per_token
+    idx, weights, aux = _router(cfg, p, x2d)
+
+    # sort token-expert assignments by expert id -> grouped GEMM
+    flat_expert = idx.reshape(-1)                      # [T*k]
+    order = jnp.argsort(flat_expert)
+    token_of = order // k                              # originating token
+    xs = x2d[token_of]                                 # [T*k, d] expert-sorted
+    group_sizes = jnp.zeros((cfg.n_experts,), jnp.int32).at[flat_expert].add(1)
+    ys = _grouped_ffn(cfg, p, xs, group_sizes)         # [T*k, d]
+
+    # combine: scatter-add back with routing weights
+    w_sorted = weights.reshape(-1)[order].astype(ys.dtype)
+    y2d = jnp.zeros((T, d), ys.dtype).at[token_of].add(ys * w_sorted[:, None])
+
+    if cfg.n_shared_experts:
+        act = jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu
+        sh = (act(x2d @ p["sh_gate"]) * (x2d @ p["sh_up"])) @ p["sh_down"]
+        y2d = y2d + sh
+    return y2d.reshape(B, S, d).astype(x.dtype), aux

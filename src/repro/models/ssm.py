@@ -1,0 +1,174 @@
+"""Mamba2-style selective SSM block (zamba2's recurrent backbone).
+
+A simplified SSD formulation with ngroups=1 (B/C shared across heads, the
+Mamba2 default): input projection produces (z, x, B, C, dt); a depthwise
+causal conv primes x/B/C; the state-space recurrence
+
+    h_t = exp(-softplus(a) * dt_t) * h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t @ C_t + D * x_t
+
+runs as a jax.lax.scan over time for training/prefill and as a single fused
+update for decode.  State shape per layer: [B, heads, d_head, d_state].
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+__all__ = ["mamba_specs", "mamba_apply", "mamba_decode", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = max(1, d_inner // 64)  # 64-wide heads (Mamba2 convention)
+    d_head = d_inner // n_heads
+    return d_inner, n_heads, d_head
+
+
+def _proj_cols(cfg: ModelConfig):
+    d_inner, n_heads, _ = _dims(cfg)
+    ds = cfg.ssm_state
+    # z, x, B, C, dt
+    return 2 * d_inner + 2 * ds + n_heads
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, n_heads, d_head = _dims(cfg)
+    ds = cfg.ssm_state
+    pd = cfg.param_dtype
+    return {
+        "w_in": ParamSpec((d, _proj_cols(cfg)), ("embed", "mlp"), pd),
+        "conv_w": ParamSpec(
+            (cfg.ssm_conv, d_inner + 2 * ds), ("conv", "mlp"), pd
+        ),
+        "a_log": ParamSpec((n_heads,), ("heads",), jnp.float32, init="zeros"),
+        "d_skip": ParamSpec((n_heads,), ("heads",), jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), jnp.float32, init="zeros"),
+        "w_out": ParamSpec((d_inner, d), ("mlp", "embed"), pd),
+        "norm_z": ParamSpec((d_inner,), ("mlp",), pd, init="zeros"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, n_heads, d_head = _dims(cfg)
+    ds = cfg.ssm_state
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. xbc: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, n_heads, d_head = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, n_heads, d_head, cfg.ssm_state), dtype),
+        "conv": jnp.zeros(
+            (batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state), dtype
+        ),
+    }
+
+
+def _ssm_scan(cfg, x, Bm, Cm, dt, a, d_skip):
+    """x: [B,S,H,Dh]; Bm/Cm: [B,S,ds]; dt: [B,S,H] -> y [B,S,H,Dh]."""
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp  # [B,H,Dh], [B,ds], [B,ds], [B,H]
+        decay = jnp.exp(-a[None, :] * dtt)[..., None, None]          # [B,H,1,1]
+        upd = (dtt[..., None, None] * xt[..., :, None]) * bt[:, None, None, :]
+        h = h * decay + upd
+        yt = jnp.einsum("bhds,bs->bhd", h, ct) + d_skip[None, :, None] * xt
+        return h, yt
+
+    B = x.shape[0]
+    _, n_heads, d_head = _dims(cfg)
+    h0 = jnp.zeros((B, n_heads, d_head, cfg.ssm_state), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        Bm.swapaxes(0, 1).astype(jnp.float32),
+        Cm.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h  # [B,S,H,Dh], final state
+
+
+def _prep(cfg: ModelConfig, p, u: jax.Array):
+    d_inner, n_heads, d_head = _dims(cfg)
+    ds = cfg.ssm_state
+    proj = u @ p["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    return z, xbc, dt_raw, (d_inner, n_heads, d_head, ds)
+
+
+def mamba_apply(
+    cfg: ModelConfig, p: Dict[str, jax.Array], u: jax.Array, *, return_state=False
+):
+    """u: [B, S, d_model] -> y: [B, S, d_model] (training / prefill)."""
+    B, S, _ = u.shape
+    z, xbc_raw, dt_raw, (d_inner, n_heads, d_head, ds) = _prep(cfg, p, u)
+    xbc = _causal_conv(xbc_raw, p["conv_w"])
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    x = x.reshape(B, S, n_heads, d_head)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_final = _ssm_scan(cfg, x, Bm, Cm, dt, a, p["d_skip"].astype(jnp.float32))
+    y = y.reshape(B, S, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z + p["norm_z"][None, None, :])
+    out = y @ p["w_out"]
+    if return_state:
+        K = cfg.ssm_conv
+        pad = jnp.pad(xbc_raw, ((0, 0), (K - 1, 0), (0, 0)))
+        conv_tail = pad[:, pad.shape[1] - (K - 1) :, :].astype(jnp.float32)
+        return out, {"h": h_final, "conv": conv_tail}
+    return out
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    u: jax.Array,                  # [B, 1, d_model]
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = u.shape[0]
+    z, xbc_t, dt_raw, (d_inner, n_heads, d_head, ds) = _prep(cfg, p, u)
+    # streaming depthwise conv: window = [conv_state, current]
+    win = jnp.concatenate(
+        [state["conv"], xbc_t[:, 0:1, :].astype(state["conv"].dtype)], axis=1
+    )  # [B,K,C]
+    conv_out = jax.nn.silu(
+        jnp.einsum(
+            "bkc,kc->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        )
+    ).astype(u.dtype)
+    x, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+    x = x.reshape(B, n_heads, d_head).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(-a[None, :] * dt)[..., None, None]
+    h = (
+        state["h"] * decay
+        + (dt[..., None, None] * x[..., :, None]) * Bm[:, None, None, :]
+    )
+    y = jnp.einsum("bhds,bs->bhd", h, Cm) + p["d_skip"].astype(jnp.float32)[
+        None, :, None
+    ] * x
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z + p["norm_z"][None, None, :])
+    new_state = {"h": h, "conv": win[:, 1:, :]}
+    return y @ p["w_out"], new_state

@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent memory mixing), with exponential gating and stabilizer state.
+
+Layer pattern comes from ``cfg.xlstm_pattern`` ('m'/'s' per layer).  The
+assigned xlstm-125m uses d_ff=0: blocks carry their own internal up/down
+projections (projection factor 2) instead of a separate FFN, following the
+xLSTM paper's block design.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, rms_norm
+
+__all__ = [
+    "mlstm_specs",
+    "slstm_specs",
+    "mlstm_apply",
+    "slstm_apply",
+    "mlstm_decode",
+    "slstm_decode",
+    "init_mlstm_state",
+    "init_slstm_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    pd = cfg.param_dtype
+    return {
+        "w_up": ParamSpec((d, 2 * d), ("embed", "mlp"), pd),
+        "w_q": ParamSpec((d, d), ("embed", "heads"), pd),
+        "w_k": ParamSpec((d, d), ("embed", "heads"), pd),
+        "w_v": ParamSpec((d, d), ("embed", "heads"), pd),
+        "w_if": ParamSpec((d, 2 * H), ("embed", "heads"), jnp.float32),
+        "w_down": ParamSpec((d, d), ("heads", "embed"), pd),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_gates(cfg, p, x_m):
+    B, S, d = x_m.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = (x_m @ p["w_q"]).reshape(B, S, H, dh).astype(jnp.float32) * (dh**-0.5)
+    k = (x_m @ p["w_k"]).reshape(B, S, H, dh).astype(jnp.float32) * (dh**-0.5)
+    v = (x_m @ p["w_v"]).reshape(B, S, H, dh).astype(jnp.float32)
+    gif = (x_m @ p["w_if"]).astype(jnp.float32).reshape(B, S, H, 2)
+    return q, k, v, gif[..., 0], gif[..., 1]
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry
+    q, k, v, ig, fg = inp  # [B,H,dh] x3, [B,H] x2
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array, *, return_state=False
+):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    up = x @ p["w_up"]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_gates(cfg, p, x_m)
+    st0 = (
+        jnp.zeros((B, H, d // H, d // H), jnp.float32),
+        jnp.zeros((B, H, d // H), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, ig, fg))
+    (C, n, m), hs = jax.lax.scan(_mlstm_step, st0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_decode(
+    cfg: ModelConfig, p, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, _, d = x.shape
+    up = x @ p["w_up"]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_gates(cfg, p, x_m)
+    (C, n, m), h = _mlstm_step(
+        (state["C"], state["n"], state["m"]),
+        (q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]),
+    )
+    h = h.reshape(B, 1, d).astype(x.dtype)
+    return (h * jax.nn.silu(z)) @ p["w_down"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    return {
+        "w_zifo": ParamSpec((d, 4 * d), ("embed", "mlp"), pd),
+        # recurrent memory mixing (block-diagonal in the paper; dense here,
+        # noted in DESIGN.md simplifications)
+        "r_zifo": ParamSpec((d, 4 * d), ("embed", "mlp"), pd, scale=0.1),
+        "w_out": ParamSpec((d, d), ("embed", "embed2"), pd),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(p, carry, wx):
+    c, n, m, h_prev = carry
+    rec = (h_prev.astype(wx.dtype) @ p["r_zifo"]).astype(jnp.float32)
+    z_r, i_r, f_r, o_r = jnp.split(wx.astype(jnp.float32) + rec, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    m_new = jnp.maximum(f_r + m, i_r)
+    i_p = jnp.exp(i_r - m_new)
+    f_p = jnp.exp(f_r + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0))
+    return (c, n, m_new, h), h
+
+
+def slstm_apply(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array, *, return_state=False
+):
+    B, S, d = x.shape
+    wx = x @ p["w_zifo"]  # [B,S,4d]
+    st0 = (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.ones((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+    )
+
+    def step(carry, wxt):
+        return _slstm_step(p, carry, wxt)
+
+    (c, n, m, h_last), hs = jax.lax.scan(step, st0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    out = h @ p["w_out"]
+    if return_state:
+        return out, {"c": c, "n": n, "m": m, "h": h_last}
+    return out
+
+
+def slstm_decode(
+    cfg: ModelConfig, p, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    wx = (x @ p["w_zifo"])[:, 0]
+    (c, n, m, h), _ = _slstm_step(
+        p, (state["c"], state["n"], state["m"], state["h"]), wx
+    )
+    y = h[:, None, :].astype(x.dtype) @ p["w_out"]
+    return y, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,15 @@
+"""Optimizer substrate (raw JAX pytrees — no optax in this environment).
+
+AdamW with fp32 master weights + moments (ZeRO-1-shardable), global-norm
+clipping, and linear-warmup cosine decay.
+"""
+
+from .adamw import AdamWConfig, adamw_init, adamw_step, cosine_lr, global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_step",
+    "cosine_lr",
+    "global_norm",
+]

@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine with slot management."""
+
+from .engine import ServeConfig, ServeEngine
+
+__all__ = ["ServeConfig", "ServeEngine"]

@@ -1,0 +1,5 @@
+"""Training substrate: sharded train step builder + fault-tolerant runner."""
+
+from .trainer import TrainConfig, Trainer, build_train_step
+
+__all__ = ["TrainConfig", "Trainer", "build_train_step"]

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: REDUCED family-preserving configs, one
+forward + train step on CPU, asserting output shapes and no NaNs (the full
+configs are exercised only via the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config, reduced
+from repro.models import Model
+
+ARCHS = sorted(REGISTRY)
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _inputs(cfg):
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    embeds = None
+    if cfg.frontend != "none":
+        embeds = jax.random.normal(RNG, (B, S, cfg.d_model), jnp.float32) * 0.02
+    return tokens, embeds
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        m = Model(cfg)
+        cache[arch] = (m, m.init(RNG))
+    return cache
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(models, arch):
+    m, params = models[arch]
+    tokens, embeds = _inputs(m.cfg)
+    logits, aux = m.forward(params, tokens, embeds=embeds)
+    assert logits.shape == (B, S, m.cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads_finite(models, arch):
+    m, params = models[arch]
+    tokens, embeds = _inputs(m.cfg)
+
+    def loss(p):
+        return m.loss_fn(p, tokens, embeds=embeds)[0]
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g))
+    )
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(models, arch):
+    """Feeding tokens one-by-one through decode must reproduce the full
+    forward's last-position logits (cache correctness across families)."""
+    m, params = models[arch]
+    tokens, embeds = _inputs(m.cfg)
+    logits, _ = m.forward(params, tokens, embeds=embeds)
+    caches = m.init_caches(B, S + 4)
+    step = jax.jit(lambda p, c, t, pos, e: m.decode_step(p, c, t, pos, embeds=e))
+    lg = None
+    for t in range(S):
+        emb_t = embeds[:, t : t + 1] if embeds is not None else None
+        lg, caches = step(params, caches, tokens[:, t], jnp.int32(t), emb_t)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits[:, -1, :]), rtol=0.06, atol=0.06
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_forward(models, arch):
+    m, params = models[arch]
+    tokens, embeds = _inputs(m.cfg)
+    logits, _ = m.forward(params, tokens, embeds=embeds)
+    lg, caches = m.prefill(params, tokens, embeds=embeds)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits[:, -1, :]), rtol=0.06, atol=0.06
+    )
+    assert len(caches) >= m.cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_specs_no_alloc(arch):
+    """FULL configs: spec construction + abstract params (no allocation)."""
+    cfg = get_config(arch)
+    m = Model(cfg)
+    ab = m.abstract_params()
+    n = m.n_params()
+    assert n > 1e8  # every assigned arch is at least 100M params
+    axes = m.param_axes()
+    flat_ab = jax.tree.leaves(ab)
+    flat_ax = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_ab) == len(flat_ax)
+    for sds, ax in zip(flat_ab, flat_ax):
+        assert len(sds.shape) == len(ax)

@@ -1,0 +1,40 @@
+"""CLI entry-point smoke tests (train/serve drivers)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(REPO, "src")
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", *args], capture_output=True, text=True,
+        env=env, timeout=timeout, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2500:]
+    return out.stdout
+
+
+def test_train_cli_reduced_runs_and_learns():
+    out = _run([
+        "repro.launch.train", "--arch", "olmoe-1b-7b", "--reduced",
+        "--steps", "20", "--batch", "4", "--seq", "32", "--lr", "1e-2",
+        "--log-every", "0",
+    ])
+    assert "loss" in out
+    # "loss a -> b" with b < a
+    seg = out.split("loss")[-1]
+    a, b = (float(x.strip().rstrip(";")) for x in seg.split("->"))
+    assert b < a, out
+
+
+def test_serve_cli_runs():
+    out = _run([
+        "repro.launch.serve", "--arch", "xlstm-125m", "--requests", "2",
+        "--prompt-len", "8", "--new-tokens", "4", "--max-batch", "2",
+    ])
+    assert "tok/s" in out
