@@ -1,0 +1,81 @@
+"""Engine wall-time across registered scenarios — the perf trajectory baseline.
+
+For every registered scenario and every engine that supports it, runs one
+simulation at the default Table-1-scale configuration (both sync policies) and
+records simulated span, traffic, and wall time.  Future performance PRs
+compare against these rows.
+
+Run: PYTHONPATH=src python -m benchmarks.scenario_sweep [--quick]
+     [--out results/scenario_sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workgroup count (CI-friendly)")
+    ap.add_argument("--out", default="results/scenario_sweep.json")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.core import EngineKind, SimConfig, SyncPolicy, list_scenarios, simulate
+
+    base = SimConfig(workgroups=48) if args.quick else SimConfig()
+    engines = (EngineKind.CYCLE, EngineKind.EVENT, EngineKind.VECTOR)
+
+    rows = []
+    print(f"{'scenario':16s} {'engine':7s} {'sync':8s} "
+          f"{'flag_reads':>11s} {'span_ns':>12s} {'wall_ms':>9s}")
+    for name in list_scenarios():
+        for sync in (SyncPolicy.SPIN, SyncPolicy.SYNCMON):
+            for eng in engines:
+                cfg = base.with_(engine=eng, sync=sync)
+                try:
+                    r = simulate(name, cfg, collect_segments=False)
+                except NotImplementedError:
+                    continue  # vector engine is gemv-only
+                rows.append({
+                    "scenario": name,
+                    "engine": eng.value,
+                    "sync": sync.value,
+                    "flag_reads": r.flag_reads,
+                    "nonflag_reads": r.nonflag_reads,
+                    "kernel_span_ns": r.kernel_span_ns,
+                    "wall_time_s": r.wall_time_s,
+                    "workgroups": cfg.workgroups,
+                })
+                print(f"{name:16s} {eng.value:7s} {sync.value:8s} "
+                      f"{r.flag_reads:>11,} {r.kernel_span_ns:>12,.0f} "
+                      f"{r.wall_time_s * 1e3:>9.2f}")
+
+    # engines must agree on traffic per (scenario, sync) — a free
+    # cross-engine regression check on every benchmark run
+    agree = True
+    by_case = {}
+    for row in rows:
+        by_case.setdefault((row["scenario"], row["sync"]), []).append(row)
+    for case, group in sorted(by_case.items()):
+        counts = {(g["flag_reads"], g["nonflag_reads"]) for g in group}
+        if len(counts) != 1:
+            agree = False
+            print(f"[bench] ENGINE MISMATCH {case}: {counts}")
+    print(f"[bench] scenario_sweep {'PASS' if agree else 'FAIL'} "
+          f"({len(rows)} rows, {len(by_case)} cases)")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows, "engines_agree": agree}, f, indent=1)
+    print(f"[bench] wrote {args.out}")
+    if not agree:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,9 @@
-"""Quickstart: simulate the paper's fused GEMV+AllReduce experiment.
+"""Quickstart: the Scenario API on the paper's fused GEMV+AllReduce experiment.
 
-Runs the Table-1 configuration under both synchronization policies, prints
-the traffic comparison (Figs. 6/9 in one shot), and renders the workgroup
-timeline (Figs. 1/2).
+Runs the Table-1 configuration under both synchronization policies via the
+unified ``simulate()`` entry point, prints the traffic comparison (Figs. 6/9
+in one shot), renders the workgroup timeline (Figs. 1/2), and then shows the
+same machinery driving a different registered traffic pattern.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,7 +18,8 @@ from repro.core import (  # noqa: E402
     PeerDelayPerturb,
     SimConfig,
     SyncPolicy,
-    run_gemv_allreduce,
+    list_scenarios,
+    simulate,
 )
 from repro.core.timeline import ascii_timeline, to_chrome_trace  # noqa: E402
 
@@ -30,8 +32,9 @@ def main() -> None:
 
     for sync in (SyncPolicy.SPIN, SyncPolicy.SYNCMON):
         cfg = SimConfig(sync=sync, engine=EngineKind.EVENT)
-        r = run_gemv_allreduce(
-            cfg, delay_us * 1000.0,
+        r = simulate(
+            "gemv_allreduce", cfg,
+            flag_delays_ns=delay_us * 1000.0,
             perturb=GaussianPerturb(seed=1, write_sigma_ns=10.0),
         )
         print(f"\n--- {sync.value} ---")
@@ -43,9 +46,10 @@ def main() -> None:
 
     print("\nideal vs contended timelines (paper Figs. 1/2):")
     cfg = SimConfig(sync=SyncPolicy.SPIN, engine=EngineKind.EVENT)
-    ideal = run_gemv_allreduce(cfg, 0.0)
-    slow = run_gemv_allreduce(
-        cfg, 0.0, perturb=PeerDelayPerturb({2: 25_000.0, 3: 25_000.0})
+    ideal = simulate("gemv_allreduce", cfg, flag_delays_ns=0.0)
+    slow = simulate(
+        "gemv_allreduce", cfg, flag_delays_ns=0.0,
+        perturb=PeerDelayPerturb({2: 25_000.0, 3: 25_000.0}),
     )
     print("\nideal (g/G compute, B flag write, r spin-wait, b reduce):")
     print(ascii_timeline(ideal.segments, max_rows=6))
@@ -56,6 +60,21 @@ def main() -> None:
         f.write(to_chrome_trace(slow.segments))
     print("\nperfetto trace written to /tmp/eidola_trace.json "
           "(open at ui.perfetto.dev)")
+
+    # ------------------------------------------------------------------
+    # the same device model, WTT, and sync policies drive every registered
+    # traffic pattern — no per-scenario simulator code
+    # ------------------------------------------------------------------
+    print("\n" + "=" * 70)
+    print(f"registered scenarios: {', '.join(list_scenarios())}")
+    print("=" * 70)
+    for name in ("ring_allreduce", "all_to_all", "pipeline_p2p"):
+        for sync in (SyncPolicy.SPIN, SyncPolicy.SYNCMON):
+            cfg = SimConfig(sync=sync, engine=EngineKind.EVENT)
+            r = simulate(name, cfg, collect_segments=False)
+            print(f"{name:15s} {sync.value:8s} flag_reads={r.flag_reads:>8,} "
+                  f"nonflag={r.nonflag_reads:>8,} "
+                  f"span={r.kernel_span_ns:>10,.0f} ns")
 
 
 if __name__ == "__main__":

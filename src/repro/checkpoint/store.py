@@ -24,9 +24,33 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: fall back to zlib where the wheel is absent
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - depends on environment
+    zstd = None
 
 __all__ = ["save_pytree", "load_pytree", "restore_latest", "CheckpointManager"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(payload)
+    return zlib.compress(payload, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Sniff the frame magic so either codec's checkpoints stay readable."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the zstandard module "
+                "is not installed"
+            )
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -55,7 +79,7 @@ def save_pytree(tree, path: str) -> None:
         blobs.append(raw)
         off += len(raw)
     payload = b"".join(blobs)
-    comp = zstd.ZstdCompressor(level=3).compress(payload)
+    comp = _compress(payload)
     with open(os.path.join(path, "data.bin.zst"), "wb") as f:
         f.write(comp)
     with open(os.path.join(path, "index.msgpack"), "wb") as f:
@@ -72,7 +96,7 @@ def load_pytree(template, path: str, shardings=None):
     with open(os.path.join(path, "index.msgpack"), "rb") as f:
         index = msgpack.unpackb(f.read())
     with open(os.path.join(path, "data.bin.zst"), "rb") as f:
-        payload = zstd.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     by_key = {e["key"]: e for e in index["entries"]}
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_flat = (

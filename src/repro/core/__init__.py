@@ -3,10 +3,22 @@ contribution), plus the compiled-HLO capture bridge that makes it a
 first-class feature of the training framework."""
 
 from .config import EngineKind, SimConfig, SyncPolicy
-from .events import PHASES, RegisteredWrite, Segment, TraceBundle
+from .events import PHASES, RegisteredWrite, Segment, TraceBundle, register_phase
 from .memory import AddressMap, DirectoryMemory, TrafficCounters
 from .monitor import MonitorEntry, MonitorLog
 from .perturb import GaussianPerturb, NullPerturb, PeerDelayPerturb
+from .scenario import (
+    PhaseSpec,
+    Scenario,
+    SweepPoint,
+    SweepRunner,
+    TrafficOp,
+    WGProgram,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    simulate,
+)
 from .simulator import Eidola, Report, run_gemv_allreduce
 from .target import EidolaDeadlock, TargetDevice
 from .workload import GemvAllReduceWorkload, make_gemv_allreduce_traces
@@ -14,10 +26,13 @@ from .wtt import WriteTrackingTable
 
 __all__ = [
     "EngineKind", "SimConfig", "SyncPolicy",
-    "PHASES", "RegisteredWrite", "Segment", "TraceBundle",
+    "PHASES", "RegisteredWrite", "Segment", "TraceBundle", "register_phase",
     "AddressMap", "DirectoryMemory", "TrafficCounters",
     "MonitorEntry", "MonitorLog",
     "GaussianPerturb", "NullPerturb", "PeerDelayPerturb",
+    "PhaseSpec", "Scenario", "SweepPoint", "SweepRunner", "TrafficOp",
+    "WGProgram", "get_scenario", "list_scenarios", "register_scenario",
+    "simulate",
     "Eidola", "Report", "run_gemv_allreduce",
     "EidolaDeadlock", "TargetDevice",
     "GemvAllReduceWorkload", "make_gemv_allreduce_traces",

@@ -149,7 +149,13 @@ class SimConfig:
         return replace(self, **kw)
 
     def validate(self) -> "SimConfig":
+        """Scenario-independent sanity checks.
+
+        GEMV-specific divisibility constraints (M, K vs. n_devices) are no
+        longer enforced here — they fire lazily from ``k_slice`` /
+        ``rows_per_device`` when the gemv_allreduce workload model actually
+        uses them, so non-GEMV scenarios are free to pick any device count.
+        """
         if self.n_cus <= 0 or self.workgroups <= 0 or self.n_egpus <= 0:
             raise ValueError("n_cus, workgroups, n_egpus must be positive")
-        _ = self.k_slice, self.rows_per_device  # trigger divisibility checks
         return self

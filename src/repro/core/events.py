@@ -32,6 +32,8 @@ __all__ = [
     "Segment",
     "PHASES",
     "PHASE_COLORS",
+    "PHASE_GLYPHS",
+    "register_phase",
 ]
 
 # ---------------------------------------------------------------------------
@@ -181,10 +183,14 @@ class TraceBundle:
 # Timeline segments (Figs. 1/2 reproduction)
 # ---------------------------------------------------------------------------
 
-# Phase names follow the fused GEMV+AllReduce pseudocode (paper Fig. 3).  The
-# colors mirror the paper's color coordination: green = tile compute, brown =
-# tile completion marker, blue = xGMI flag write, red = spin-wait, and we give
-# the final reduce/broadcast its own shades.
+# Phase names of the fused GEMV+AllReduce pseudocode (paper Fig. 3) — the
+# *canonical* gemv vocabulary only, frozen for the paper-figure legends.  The
+# full set of valid Segment phases is ``PHASE_COLORS.keys()``, which scenarios
+# extend at import time via register_phase(); consumers bucketing arbitrary
+# scenarios' segments must iterate PHASE_COLORS, not this tuple.  The colors
+# mirror the paper's color coordination: green = tile compute, brown = tile
+# completion marker, blue = xGMI flag write, red = spin-wait, and we give the
+# final reduce/broadcast its own shades.
 PHASES: Tuple[str, ...] = (
     "remote_tiles",  # lines 2-5: compute partial tiles needed by remote GPUs
     "flag_write",    # line 7:    xGMI write to flags[my_gpu] on all peers
@@ -205,6 +211,30 @@ PHASE_COLORS: Dict[str, str] = {
     "descheduled": "grey",
 }
 
+PHASE_GLYPHS: Dict[str, str] = {
+    "remote_tiles": "g",
+    "flag_write": "B",
+    "local_tiles": "G",
+    "wait_flags": "r",
+    "reduce": "b",
+    "broadcast": "^",
+    "descheduled": ".",
+}
+
+
+def register_phase(name: str, *, color: str = "grey", glyph: str = "?") -> str:
+    """Register a phase name so :class:`Segment` accepts it.
+
+    The canonical fused-kernel phases above are pre-registered; scenarios
+    (``repro.core.scenarios``) register their own phase vocabularies at import
+    time.  Re-registering an existing name is a no-op that keeps the original
+    color/glyph (the gemv palette mirrors the paper and must stay stable).
+    """
+    if name not in PHASE_COLORS:
+        PHASE_COLORS[name] = color
+        PHASE_GLYPHS[name] = glyph
+    return name
+
 
 @dataclass(frozen=True)
 class Segment:
@@ -216,8 +246,10 @@ class Segment:
     end_ns: float
 
     def __post_init__(self) -> None:
-        if self.phase not in PHASES:
-            raise ValueError(f"unknown phase {self.phase!r}")
+        if self.phase not in PHASE_COLORS:
+            raise ValueError(
+                f"unknown phase {self.phase!r} (register it with register_phase)"
+            )
         if self.end_ns < self.start_ns:
             raise ValueError("segment ends before it starts")
 

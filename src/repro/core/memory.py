@@ -34,32 +34,43 @@ class AddressMap:
     participating GPUs ... ensures a uniform address layout").
 
     Regions (byte offsets, half-open):
-      [flag_base, flag_base + n_devices*flag_stride)   flag variables
+      [flag_base, flag_base + flag_slots*n_devices*flag_stride)  flag variables
       [partial_base, ...)                              peer partial-tile buffers
       [data_base, ...)                                 everything else
+
+    ``flag_slots`` generalises the single ``flags[src]`` array of the fused
+    GEMV+AllReduce kernel to scenarios that synchronise more than once per
+    peer (e.g. one flag per ring step, or per pipeline microbatch): slot ``s``
+    is a second index into the flag region, and ``flag_addr(src)`` with the
+    default slot 0 is byte-identical to the original layout.
     """
 
     flag_base: int = 0x3F_D004_F00
     flag_stride: int = LINE_BYTES  # padded flags to prevent false sharing
     n_devices: int = 4
+    flag_slots: int = 1
     flags_share_line: bool = False  # paper Fig. 7 shows both layouts exist
     partial_base: int = 0x3F_E000_000
     data_base: int = 0x100_000
 
-    def flag_addr(self, src_device: int) -> int:
-        """Address of ``flags[src_device]`` in the target's memory."""
+    def flag_addr(self, src_device: int, slot: int = 0) -> int:
+        """Address of ``flags[slot][src_device]`` in the target's memory."""
         if not (0 <= src_device < self.n_devices):
             raise ValueError(f"device {src_device} out of range")
+        if not (0 <= slot < self.flag_slots):
+            raise ValueError(f"flag slot {slot} out of range")
+        idx = slot * self.n_devices + src_device
         if self.flags_share_line:
             # 8-byte flags packed into one line (monitor-mask exercise)
-            return self.flag_base + 8 * src_device
-        return self.flag_base + self.flag_stride * src_device
+            return self.flag_base + 8 * idx
+        return self.flag_base + self.flag_stride * idx
 
     def flag_region(self) -> Tuple[int, int]:
+        n_flags = self.n_devices * self.flag_slots
         if self.flags_share_line:
-            hi = self.flag_base + 8 * self.n_devices
+            hi = self.flag_base + 8 * n_flags
         else:
-            hi = self.flag_base + self.flag_stride * self.n_devices
+            hi = self.flag_base + self.flag_stride * n_flags
         return (self.flag_base, hi)
 
     def is_flag(self, addr: int) -> bool:

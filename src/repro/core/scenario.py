@@ -1,0 +1,397 @@
+"""Scenario API: pluggable per-GPU traffic patterns as data.
+
+The paper's claim that Eidola "supports configurable per-GPU traffic patterns
+and enables isolated performance analysis under different communication
+scenarios" requires more than the one fused GEMV+AllReduce kernel the seed
+hardwired.  This module is the redesigned public surface:
+
+* :class:`PhaseSpec` / :class:`WGProgram` — per-workgroup *phase programs as
+  data*: an ordered list of compute/write/wait steps with durations and
+  closed-form traffic attribution.  :class:`repro.core.target.TargetDevice`
+  interprets these programs instead of a hardcoded state machine, so the
+  spin/SyncMon wait semantics, the WTT, and all three engines are shared by
+  every scenario.
+* :class:`Scenario` — owns (a) program generation for the detailed device and
+  (b) eidolon :class:`TraceBundle` generation (the registered peer writes).
+* a registry (:func:`register_scenario` / :func:`get_scenario` /
+  :func:`list_scenarios`) of built-in and user scenarios, and
+* :func:`simulate` — the unified entry point: name + config + params in,
+  :class:`repro.core.simulator.Report` out — plus :class:`SweepRunner`, which
+  fans one scenario across a parameter grid and engine set.
+
+Built-in scenarios live in :mod:`repro.core.scenarios`; importing that package
+(or calling any registry function) registers them.
+"""
+
+from __future__ import annotations
+
+import abc
+import itertools
+from dataclasses import dataclass, fields
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type, Union
+
+from .config import EngineKind, SimConfig
+from .events import TraceBundle
+from .memory import AddressMap
+
+__all__ = [
+    "TrafficOp",
+    "PhaseSpec",
+    "WGProgram",
+    "Scenario",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "simulate",
+    "SweepPoint",
+    "SweepRunner",
+]
+
+
+# ---------------------------------------------------------------------------
+# phase programs as data
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrafficOp:
+    """Closed-form traffic accounted when the owning phase completes.
+
+    kind        "reads" (non-flag device reads), "local_writes", or
+                "xgmi_out" (writes pushed to peers over the fabric).
+    n           number of homogeneous requests.
+    bytes_each  payload bytes per request.
+    """
+
+    kind: str
+    n: int
+    bytes_each: int
+
+    _KINDS = ("reads", "local_writes", "xgmi_out")
+
+    def __post_init__(self) -> None:
+        if self.kind not in self._KINDS:
+            raise ValueError(f"traffic kind must be one of {self._KINDS}")
+        if self.n < 0 or self.bytes_each < 0:
+            raise ValueError("traffic counts must be non-negative")
+
+    def apply(self, memory) -> None:
+        if self.kind == "reads":
+            memory.bulk_reads(self.n, bytes_each=self.bytes_each)
+        elif self.kind == "local_writes":
+            memory.bulk_local_writes(self.n, bytes_each=self.bytes_each)
+        else:
+            memory.issue_xgmi_out(self.n, bytes_each=self.bytes_each)
+
+
+def reads(n: int, bytes_each: int) -> TrafficOp:
+    return TrafficOp("reads", n, bytes_each)
+
+
+def local_writes(n: int, bytes_each: int) -> TrafficOp:
+    return TrafficOp("local_writes", n, bytes_each)
+
+
+def xgmi_out(n: int, bytes_each: int) -> TrafficOp:
+    return TrafficOp("xgmi_out", n, bytes_each)
+
+
+@dataclass(frozen=True)
+class PhaseSpec:
+    """One step of a workgroup's phase program.
+
+    Two flavours:
+
+    * timed phase — ``wait_addrs is None``: runs for ``duration_cycles``
+      (perturbable via ``Perturb.scale_phase(wg, name, base)``), then accounts
+      ``traffic`` in closed form.
+    * wait phase — ``wait_addrs`` is an ordered tuple of flag *addresses* the
+      workgroup observes sequentially under the configured sync policy
+      (spin-poll or SyncMon monitor/mwait).  Flag-read traffic is accounted by
+      the interpreter, not by ``traffic``; ``duration_cycles`` is ignored.
+
+    ``name`` doubles as the timeline segment label and the perturbation key;
+    it must be registered via :func:`repro.core.events.register_phase`.
+    """
+
+    name: str
+    duration_cycles: int = 0
+    traffic: Tuple[TrafficOp, ...] = ()
+    wait_addrs: Optional[Tuple[int, ...]] = None
+
+    @property
+    def is_wait(self) -> bool:
+        return self.wait_addrs is not None
+
+
+@dataclass(frozen=True)
+class WGProgram:
+    """The full phase program of one workgroup on the detailed device."""
+
+    wg: int
+    cu: int
+    dispatch_cycle: int
+    phases: Tuple[PhaseSpec, ...]
+
+    def wait_addresses(self) -> List[int]:
+        out: List[int] = []
+        for ph in self.phases:
+            if ph.wait_addrs:
+                out.extend(ph.wait_addrs)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the Scenario base class
+# ---------------------------------------------------------------------------
+
+
+class Scenario(abc.ABC):
+    """A communication scenario: phase programs + eidolon write traces.
+
+    Subclasses set ``name`` (the registry key), accept their swept parameters
+    as keyword arguments, and implement :meth:`programs` and :meth:`traces`.
+    ``params`` holds whatever keyword arguments the constructor accepted, for
+    reporting.
+    """
+
+    name: str = ""
+
+    def __init__(self, cfg: SimConfig, amap: Optional[AddressMap] = None):
+        self.cfg = cfg
+        self.amap = amap or self.default_amap(cfg)
+        self.params: Dict[str, object] = {}
+
+    @classmethod
+    def default_amap(cls, cfg: SimConfig) -> AddressMap:
+        return AddressMap(n_devices=cfg.n_devices)
+
+    @abc.abstractmethod
+    def programs(self) -> List[WGProgram]:
+        """Per-workgroup phase programs for the detailed device (device 0)."""
+
+    @abc.abstractmethod
+    def traces(self) -> TraceBundle:
+        """Registered peer writes the eidolons replay (including every flag
+        write some program waits on — otherwise the run deadlocks)."""
+
+    # -- optional hooks ------------------------------------------------------
+
+    def run_vectorized(self, sim) -> Optional["object"]:
+        """Return a Report from a scenario-specific closed-form engine, or
+        ``None`` if the scenario only supports the cycle/event engines."""
+        return None
+
+    def describe(self) -> str:
+        ps = ", ".join(f"{k}={v!r}" for k, v in self.params.items())
+        return f"<{type(self).__name__} {self.name}({ps})>"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Scenario]] = {}
+
+
+def register_scenario(cls: Type[Scenario]) -> Type[Scenario]:
+    """Class decorator: register a Scenario subclass under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    existing = _REGISTRY.get(cls.name)
+    if existing is not None and existing is not cls:
+        raise ValueError(f"scenario {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def _load_builtins() -> None:
+    # importing the package registers the built-in scenarios
+    from . import scenarios  # noqa: F401
+
+
+def get_scenario(name: str) -> Type[Scenario]:
+    _load_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_scenarios() -> List[str]:
+    _load_builtins()
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# unified entry point
+# ---------------------------------------------------------------------------
+
+ScenarioLike = Union[str, Scenario, Type[Scenario]]
+
+
+def _resolve(scenario: ScenarioLike, cfg: SimConfig, params: Dict) -> Scenario:
+    if isinstance(scenario, Scenario):
+        if params:
+            raise ValueError(
+                "pass scenario params to the constructor when providing an "
+                "instance, not to simulate()"
+            )
+        return scenario
+    cls = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    return cls(cfg, **params)
+
+
+def simulate(
+    scenario: ScenarioLike,
+    cfg: Optional[SimConfig] = None,
+    *,
+    perturb=None,
+    collect_segments: bool = True,
+    **params,
+):
+    """Simulate one kernel launch of ``scenario`` under ``cfg``.
+
+    ``scenario`` may be a registered name (see :func:`list_scenarios`), a
+    Scenario subclass, or a ready-built instance (whose own cfg is then used;
+    passing a *different* cfg alongside an instance is an error).  Extra
+    keyword arguments are forwarded to the scenario constructor (e.g.
+    ``flag_delays_ns=...`` for ``gemv_allreduce``).  Returns a
+    :class:`repro.core.simulator.Report`.
+    """
+    from .simulator import Eidola  # late import: simulator imports target
+
+    if isinstance(scenario, Scenario):
+        # the instance's programs/traces were built from its cfg; running the
+        # engines under another cfg would silently mix two configurations
+        if cfg is not None and cfg != scenario.cfg:
+            raise ValueError(
+                "scenario instance was built with a different SimConfig than "
+                "the one passed to simulate(); rebuild the scenario or drop "
+                "the cfg argument"
+            )
+        cfg = scenario.cfg
+    cfg = (cfg or SimConfig()).validate()
+    sc = _resolve(scenario, cfg, params)
+    return Eidola(
+        cfg,
+        sc.traces(),
+        scenario=sc,
+        amap=sc.amap,
+        perturb=perturb,
+        collect_segments=collect_segments,
+    ).run()
+
+
+# ---------------------------------------------------------------------------
+# parameter sweeps
+# ---------------------------------------------------------------------------
+
+# SimConfig field names: any sweep/CLI key in this set is a config override,
+# everything else is a scenario constructor parameter (the CLI reuses this)
+SIM_CONFIG_FIELDS = frozenset(f.name for f in fields(SimConfig))
+_CFG_FIELDS = SIM_CONFIG_FIELDS
+
+
+@dataclass
+class SweepPoint:
+    """One (scenario params x config overrides x engine) simulation."""
+
+    scenario: str
+    engine: str
+    overrides: Dict[str, object]
+    params: Dict[str, object]
+    report: object  # Report (typed loosely to avoid the circular import)
+
+    def row(self) -> Dict[str, object]:
+        r = self.report
+        return {
+            "scenario": self.scenario,
+            "engine": self.engine,
+            **self.overrides,
+            **self.params,
+            "flag_reads": r.flag_reads,
+            "nonflag_reads": r.nonflag_reads,
+            "kernel_span_ns": r.kernel_span_ns,
+            "wall_time_s": r.wall_time_s,
+        }
+
+
+class SweepRunner:
+    """Fan one scenario across a parameter grid and a set of engines.
+
+    Grid keys naming :class:`SimConfig` fields become config overrides; all
+    other keys are forwarded to the scenario constructor.  The cross product
+    of the grid runs once per engine.
+    """
+
+    def __init__(
+        self,
+        scenario: Union[str, Type[Scenario]],
+        base_cfg: Optional[SimConfig] = None,
+        *,
+        engines: Sequence[EngineKind] = (EngineKind.EVENT,),
+        perturb=None,
+        collect_segments: bool = False,
+    ):
+        self.scenario_cls = (
+            get_scenario(scenario) if isinstance(scenario, str) else scenario
+        )
+        self.base_cfg = base_cfg or SimConfig()
+        self.engines = tuple(engines)
+        self.perturb = perturb
+        self.collect_segments = collect_segments
+
+    def run(self, grid: Optional[Dict[str, Iterable]] = None, **grid_kw) -> List[SweepPoint]:
+        grid = dict(grid or {})
+        grid.update(grid_kw)
+        keys = sorted(grid)
+        combos = list(itertools.product(*(list(grid[k]) for k in keys))) or [()]
+        points: List[SweepPoint] = []
+        for combo in combos:
+            assignment = dict(zip(keys, combo))
+            overrides = {k: v for k, v in assignment.items() if k in _CFG_FIELDS}
+            params = {k: v for k, v in assignment.items() if k not in _CFG_FIELDS}
+            for eng in self.engines:
+                cfg = self.base_cfg.with_(engine=eng, **overrides)
+                report = simulate(
+                    self.scenario_cls,
+                    cfg,
+                    perturb=self.perturb,
+                    collect_segments=self.collect_segments,
+                    **params,
+                )
+                points.append(
+                    SweepPoint(
+                        scenario=self.scenario_cls.name,
+                        engine=EngineKind(eng).value,
+                        overrides=overrides,
+                        params=params,
+                        report=report,
+                    )
+                )
+        return points
+
+    @staticmethod
+    def to_csv(points: Sequence[SweepPoint]) -> str:
+        if not points:
+            return ""
+
+        def cell(v) -> str:
+            s = str(v)
+            if any(ch in s for ch in ",\"\n"):
+                s = '"' + s.replace('"', '""') + '"'
+            return s
+
+        cols: List[str] = []
+        for p in points:
+            for k in p.row():
+                if k not in cols:
+                    cols.append(k)
+        lines = [",".join(cell(c) for c in cols)]
+        for p in points:
+            row = p.row()
+            lines.append(",".join(cell(row.get(c, "")) for c in cols))
+        return "\n".join(lines)

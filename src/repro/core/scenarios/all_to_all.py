@@ -1,0 +1,165 @@
+"""All-to-all (MoE-dispatch-shaped) incast as an Eidola scenario.
+
+Expert-parallel MoE dispatch is the canonical irregular pattern the paper
+motivates: every device simultaneously pushes a token shard to every other
+device, then barriers before the expert computation.  From the detailed
+device's perspective this is an *incast*: n-1 peers each land a burst of data
+writes followed by a completion flag, and every workgroup waits on all n-1
+flags (exactly the fused kernel's wait structure, but with the compute phases
+on the other side of the barrier).
+
+Peer arrival times are the all-to-all cost from :mod:`repro.core.topology`
+plus a configurable per-peer skew — sweeping ``skew_ns`` reproduces the
+incast-straggler effect (flag traffic grows linearly in the last arrival under
+SPIN, stays flat under SyncMon).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+from ..config import SimConfig
+from ..events import TraceBundle, register_phase
+from ..memory import AddressMap
+from ..scenario import (
+    PhaseSpec,
+    Scenario,
+    WGProgram,
+    local_writes,
+    reads,
+    register_scenario,
+    xgmi_out,
+)
+from ..topology import HardwareSpec, Topology, V5E
+
+__all__ = ["AllToAllScenario"]
+
+register_phase("a2a_dispatch", color="green", glyph="d")
+register_phase("a2a_combine", color="brown", glyph="c")
+
+
+@register_scenario
+class AllToAllScenario(Scenario):
+    """MoE-dispatch-shaped all-to-all incast with per-peer arrival skew."""
+
+    name = "all_to_all"
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        amap: Optional[AddressMap] = None,
+        *,
+        tokens_per_device: int = 4096,
+        token_bytes: int = 512,
+        skew_ns: float = 2_000.0,
+        writes_per_peer: int = 8,
+        hw: HardwareSpec = V5E,
+    ):
+        super().__init__(cfg, amap)
+        if tokens_per_device <= 0 or token_bytes <= 0:
+            raise ValueError("tokens_per_device and token_bytes must be positive")
+        self.tokens_per_device = int(tokens_per_device)
+        self.token_bytes = int(token_bytes)
+        self.skew_ns = float(skew_ns)
+        self.writes_per_peer = int(writes_per_peer)
+        k = cfg.n_devices
+        self.payload_bytes = self.tokens_per_device * self.token_bytes
+        topo = Topology(axis_sizes=(k,), axis_names=("ep",), hw=hw, dci_axes=())
+        self.cost = topo.collective("all-to-all", self.payload_bytes, "ep")
+        self.base_arrival_ns = self.cost.time_s * 1e9
+        self.params = {
+            "tokens_per_device": self.tokens_per_device,
+            "token_bytes": self.token_bytes,
+            "skew_ns": self.skew_ns,
+        }
+
+    # ------------------------------------------------------------------
+
+    def _shares(self) -> tuple:
+        """Per-WG (bytes, sectors, cycles) of the local token shard."""
+        cfg = self.cfg
+        share = max(1, self.payload_bytes // cfg.workgroups)
+        sectors = math.ceil(share / cfg.sector_bytes)
+        cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
+        return share, sectors, cycles
+
+    def programs(self) -> List[WGProgram]:
+        cfg = self.cfg
+        n_peers = cfg.n_egpus
+        share, sectors, cycles = self._shares()
+        peer_share = max(1, share // cfg.n_devices)
+        wait_addrs = tuple(
+            self.amap.flag_addr(g) for g in range(1, cfg.n_devices)
+        )
+        out: List[WGProgram] = []
+        for wg in range(cfg.workgroups):
+            cu = wg % cfg.n_cus
+            wave = wg // cfg.n_cus
+            out.append(
+                WGProgram(
+                    wg=wg,
+                    cu=cu,
+                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
+                    phases=(
+                        # route + push our token shard to every peer, then the
+                        # completion flag write to each of them
+                        PhaseSpec(
+                            "a2a_dispatch",
+                            cycles,
+                            traffic=(
+                                reads(sectors, cfg.sector_bytes),
+                                xgmi_out(n_peers, peer_share),
+                                xgmi_out(n_peers, 8),
+                            ),
+                        ),
+                        # incast barrier on every peer's completion flag
+                        PhaseSpec("wait_flags", wait_addrs=wait_addrs),
+                        # combine: read the n-1 received shards + our own
+                        PhaseSpec(
+                            "a2a_combine",
+                            cycles * cfg.n_devices,
+                            traffic=(
+                                reads(sectors * cfg.n_devices, cfg.sector_bytes),
+                                local_writes(1, share),
+                            ),
+                        ),
+                    ),
+                )
+            )
+        return out
+
+    def traces(self) -> TraceBundle:
+        cfg = self.cfg
+        bundle = TraceBundle(
+            meta={
+                "scenario": self.name,
+                "n_devices": cfg.n_devices,
+                "payload_bytes": self.payload_bytes,
+                "base_arrival_ns": self.base_arrival_ns,
+                "skew_ns": self.skew_ns,
+            }
+        )
+        lead = cfg.data_write_lead_ns
+        for g in range(1, cfg.n_devices):
+            flag_t = self.base_arrival_ns + (g - 1) * self.skew_ns
+            if cfg.include_data_writes and self.writes_per_peer > 0:
+                t0 = max(0.0, flag_t - lead)
+                for i in range(self.writes_per_peer):
+                    t = t0 + (flag_t - t0) * (i + 1) / (self.writes_per_peer + 1)
+                    bundle.add(
+                        wakeup_ns=t,
+                        addr=self.amap.partial_base
+                        + (g * self.writes_per_peer + i) * 64,
+                        data=0xE0 + g,
+                        size=8,
+                        src=g,
+                    )
+            bundle.add(
+                wakeup_ns=flag_t,
+                addr=self.amap.flag_addr(g),
+                data=1,
+                size=8,
+                src=g,
+            )
+        return bundle

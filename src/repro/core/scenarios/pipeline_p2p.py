@@ -1,0 +1,185 @@
+"""Pipeline-parallel p2p send/recv as an Eidola scenario.
+
+The detailed device is one interior stage of a pipeline: for every microbatch
+it (1) waits for the previous stage's activation hand-off — the upstream
+eidolon pushes the activation tensor as data writes, then a per-microbatch
+arrival flag, the TPU analogue being a DMA-completion semaphore — (2) runs the
+stage's forward compute, and (3) pushes its own activations to the next stage
+over the fabric.
+
+One flag slot per microbatch keeps successive hand-offs independent (a flag is
+write-once, so reusing one address would make every wait after the first free).
+The upstream cadence is derived from the collective-permute cost of the
+activation tensor in :mod:`repro.core.topology`, stretched by
+``bubble_factor`` to model the upstream stage's own compute time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+from ..config import SimConfig
+from ..events import TraceBundle, register_phase
+from ..memory import AddressMap
+from ..scenario import (
+    PhaseSpec,
+    Scenario,
+    WGProgram,
+    local_writes,
+    reads,
+    register_scenario,
+    xgmi_out,
+)
+from ..topology import HardwareSpec, Topology, V5E
+
+__all__ = ["PipelineP2PScenario"]
+
+register_phase("fwd_compute", color="green", glyph="f")
+register_phase("p2p_send", color="blue", glyph=">")
+
+
+@register_scenario
+class PipelineP2PScenario(Scenario):
+    """Pipeline stage: per-microbatch activation wait -> compute -> p2p send."""
+
+    name = "pipeline_p2p"
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        amap: Optional[AddressMap] = None,
+        *,
+        n_microbatches: int = 8,
+        activation_bytes: int = 1 << 19,
+        compute_scale: float = 4.0,
+        bubble_factor: float = 1.25,
+        writes_per_microbatch: int = 4,
+        interval_ns: Optional[float] = None,
+        hw: HardwareSpec = V5E,
+    ):
+        super().__init__(cfg, amap)
+        if n_microbatches <= 0 or activation_bytes <= 0:
+            raise ValueError("n_microbatches and activation_bytes must be positive")
+        self.n_microbatches = int(n_microbatches)
+        self.activation_bytes = int(activation_bytes)
+        self.compute_scale = float(compute_scale)
+        self.writes_per_microbatch = int(writes_per_microbatch)
+        self.upstream = 1  # previous stage
+        # next stage: where the p2p_send traffic is headed (trace metadata;
+        # outgoing writes are aggregate counters, not per-address)
+        self.downstream = 2 if cfg.n_devices > 2 else 1
+        topo = Topology(axis_sizes=(cfg.n_devices,), axis_names=("pp",), hw=hw,
+                        dci_axes=())
+        self.cost = topo.collective(
+            "collective-permute", self.activation_bytes, "pp"
+        )
+        if interval_ns is not None:
+            self.interval_ns = float(interval_ns)
+        else:
+            self.interval_ns = self.cost.time_s * 1e9 * float(bubble_factor)
+        self.params = {
+            "n_microbatches": self.n_microbatches,
+            "activation_bytes": self.activation_bytes,
+            "interval_ns": self.interval_ns,
+        }
+
+    @classmethod
+    def default_amap(cls, cfg: SimConfig) -> AddressMap:
+        # worst case a caller re-instantiates with more microbatches on the
+        # same map; 64 slots cover the defaults with headroom
+        return AddressMap(n_devices=cfg.n_devices, flag_slots=64)
+
+    # ------------------------------------------------------------------
+
+    def _shares(self) -> tuple:
+        cfg = self.cfg
+        share = max(1, self.activation_bytes // cfg.workgroups)
+        sectors = math.ceil(share / cfg.sector_bytes)
+        io_cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
+        fwd_cycles = max(1, math.ceil(io_cycles * self.compute_scale))
+        return share, sectors, io_cycles, fwd_cycles
+
+    def programs(self) -> List[WGProgram]:
+        cfg = self.cfg
+        if self.n_microbatches > self.amap.flag_slots:
+            raise ValueError(
+                f"{self.n_microbatches} microbatches need flag_slots >= "
+                f"{self.n_microbatches} (amap has {self.amap.flag_slots})"
+            )
+        share, sectors, io_cycles, fwd_cycles = self._shares()
+        out: List[WGProgram] = []
+        for wg in range(cfg.workgroups):
+            cu = wg % cfg.n_cus
+            wave = wg // cfg.n_cus
+            phases: List[PhaseSpec] = []
+            for m in range(self.n_microbatches):
+                phases.append(
+                    PhaseSpec(
+                        "wait_flags",
+                        wait_addrs=(self.amap.flag_addr(self.upstream, slot=m),),
+                    )
+                )
+                phases.append(
+                    PhaseSpec(
+                        "fwd_compute",
+                        fwd_cycles,
+                        traffic=(
+                            reads(sectors, cfg.sector_bytes),
+                            local_writes(1, share),
+                        ),
+                    )
+                )
+                phases.append(
+                    PhaseSpec(
+                        "p2p_send",
+                        io_cycles,
+                        traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
+                    )
+                )
+            out.append(
+                WGProgram(
+                    wg=wg,
+                    cu=cu,
+                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
+                    phases=tuple(phases),
+                )
+            )
+        return out
+
+    def traces(self) -> TraceBundle:
+        cfg = self.cfg
+        bundle = TraceBundle(
+            meta={
+                "scenario": self.name,
+                "n_devices": cfg.n_devices,
+                "n_microbatches": self.n_microbatches,
+                "activation_bytes": self.activation_bytes,
+                "interval_ns": self.interval_ns,
+                "upstream": self.upstream,
+                "downstream": self.downstream,
+            }
+        )
+        lead = cfg.data_write_lead_ns
+        for m in range(self.n_microbatches):
+            flag_t = self.interval_ns * (m + 1)
+            if cfg.include_data_writes and self.writes_per_microbatch > 0:
+                t0 = max(0.0, flag_t - lead)
+                for i in range(self.writes_per_microbatch):
+                    t = t0 + (flag_t - t0) * (i + 1) / (self.writes_per_microbatch + 1)
+                    bundle.add(
+                        wakeup_ns=t,
+                        addr=self.amap.partial_base
+                        + (m * self.writes_per_microbatch + i) * 64,
+                        data=0xD0 + m % 16,
+                        size=8,
+                        src=self.upstream,
+                    )
+            bundle.add(
+                wakeup_ns=flag_t,
+                addr=self.amap.flag_addr(self.upstream, slot=m),
+                data=1,
+                size=8,
+                src=self.upstream,
+            )
+        return bundle

@@ -1,0 +1,181 @@
+"""Chunked ring all-reduce as an Eidola scenario.
+
+Devices 0..n-1 form a unidirectional ring (0 -> 1 -> ... -> n-1 -> 0); the
+detailed device 0 receives from its upstream neighbour ``n-1`` and forwards to
+device 1.  A payload of ``payload_bytes`` is split into n chunks and
+reduce-scattered then all-gathered in the textbook 2(n-1) ring steps.  Each
+step is a *synchronization event* at the target: the upstream eidolon pushes
+its chunk (data writes into the partial region) followed by a per-step flag —
+one flag slot per ring step — and every workgroup waits on that flag before
+reducing/forwarding its share of the chunk.
+
+The eidolon arrival schedule is synthesized from the collective cost model in
+:mod:`repro.core.topology` (ring algebra over the configured fabric), so the
+step cadence reflects link bandwidth and hop latency rather than an arbitrary
+constant; ``step_time_ns`` overrides it for controlled sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+from ..config import SimConfig
+from ..events import TraceBundle, register_phase
+from ..memory import AddressMap
+from ..scenario import (
+    PhaseSpec,
+    Scenario,
+    WGProgram,
+    local_writes,
+    reads,
+    register_scenario,
+    xgmi_out,
+)
+from ..topology import HardwareSpec, Topology, V5E
+
+__all__ = ["RingAllReduceScenario"]
+
+register_phase("ring_send", color="green", glyph="s")
+register_phase("ring_reduce", color="brown", glyph="+")
+register_phase("ring_gather", color="blue", glyph="a")
+
+
+@register_scenario
+class RingAllReduceScenario(Scenario):
+    """Chunked ring all-reduce; one wait/flag per ring step."""
+
+    name = "ring_allreduce"
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        amap: Optional[AddressMap] = None,
+        *,
+        payload_bytes: int = 1 << 20,
+        step_time_ns: Optional[float] = None,
+        writes_per_step: int = 4,
+        hw: HardwareSpec = V5E,
+    ):
+        super().__init__(cfg, amap)
+        if payload_bytes <= 0:
+            raise ValueError("payload_bytes must be positive")
+        self.payload_bytes = int(payload_bytes)
+        self.writes_per_step = int(writes_per_step)
+        self.hw = hw
+        k = cfg.n_devices
+        self.steps = 2 * (k - 1)
+        self.upstream = k - 1
+        topo = Topology(axis_sizes=(k,), axis_names=("ring",), hw=hw, dci_axes=())
+        self.cost = topo.collective("all-reduce", self.payload_bytes, "ring")
+        if step_time_ns is not None:
+            self.step_time_ns = float(step_time_ns)
+        else:
+            self.step_time_ns = self.cost.time_s * 1e9 / max(1, self.steps)
+        self.params = {
+            "payload_bytes": self.payload_bytes,
+            "step_time_ns": self.step_time_ns,
+            "writes_per_step": self.writes_per_step,
+        }
+
+    @classmethod
+    def default_amap(cls, cfg: SimConfig) -> AddressMap:
+        return AddressMap(
+            n_devices=cfg.n_devices, flag_slots=max(1, 2 * (cfg.n_devices - 1))
+        )
+
+    # ------------------------------------------------------------------
+
+    def _wg_share(self) -> tuple:
+        """(bytes, sectors, cycles) of one WG's slice of one chunk."""
+        cfg = self.cfg
+        chunk = max(1, self.payload_bytes // cfg.n_devices)
+        share = max(1, chunk // cfg.workgroups)
+        sectors = math.ceil(share / cfg.sector_bytes)
+        cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
+        return share, sectors, cycles
+
+    def programs(self) -> List[WGProgram]:
+        cfg = self.cfg
+        share, sectors, cycles = self._wg_share()
+        rs_steps = cfg.n_devices - 1
+        out: List[WGProgram] = []
+        for wg in range(cfg.workgroups):
+            cu = wg % cfg.n_cus
+            wave = wg // cfg.n_cus
+            phases: List[PhaseSpec] = [
+                # step 0: push our own chunk downstream before waiting
+                PhaseSpec(
+                    "ring_send",
+                    cycles,
+                    traffic=(reads(sectors, cfg.sector_bytes), xgmi_out(1, share)),
+                )
+            ]
+            for s in range(self.steps):
+                phases.append(
+                    PhaseSpec(
+                        "wait_flags",
+                        wait_addrs=(self.amap.flag_addr(self.upstream, slot=s),),
+                    )
+                )
+                reducing = s < rs_steps
+                last = s == self.steps - 1
+                traffic = [
+                    # incoming chunk + (while reducing) the local accumulator
+                    reads(sectors * (2 if reducing else 1), cfg.sector_bytes),
+                    local_writes(1, share),
+                ]
+                if not last:
+                    traffic.append(xgmi_out(1, share))
+                phases.append(
+                    PhaseSpec(
+                        "ring_reduce" if reducing else "ring_gather",
+                        cycles,
+                        traffic=tuple(traffic),
+                    )
+                )
+            out.append(
+                WGProgram(
+                    wg=wg,
+                    cu=cu,
+                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
+                    phases=tuple(phases),
+                )
+            )
+        return out
+
+    def traces(self) -> TraceBundle:
+        cfg = self.cfg
+        bundle = TraceBundle(
+            meta={
+                "scenario": self.name,
+                "n_devices": cfg.n_devices,
+                "payload_bytes": self.payload_bytes,
+                "steps": self.steps,
+                "step_time_ns": self.step_time_ns,
+            }
+        )
+        chunk = max(1, self.payload_bytes // cfg.n_devices)
+        lead = cfg.data_write_lead_ns
+        for s in range(self.steps):
+            flag_t = self.step_time_ns * (s + 1)
+            if cfg.include_data_writes and self.writes_per_step > 0:
+                t0 = max(0.0, flag_t - lead)
+                for i in range(self.writes_per_step):
+                    t = t0 + (flag_t - t0) * (i + 1) / (self.writes_per_step + 1)
+                    bundle.add(
+                        wakeup_ns=t,
+                        addr=self.amap.partial_base
+                        + (s * self.writes_per_step + i) * 64,
+                        data=0xC0 + s,
+                        size=min(8, max(1, chunk % 8 or 8)),
+                        src=self.upstream,
+                    )
+            bundle.add(
+                wakeup_ns=flag_t,
+                addr=self.amap.flag_addr(self.upstream, slot=s),
+                data=1,
+                size=8,
+                src=self.upstream,
+            )
+        return bundle

@@ -17,8 +17,8 @@ from .engine import CyclePollEngine, EventQueueEngine
 from .events import RegisteredWrite, Segment, TraceBundle
 from .memory import AddressMap, DirectoryMemory
 from .monitor import MonitorLog
+from .scenario import Scenario
 from .target import TargetDevice
-from .workload import GemvAllReduceWorkload, make_gemv_allreduce_traces
 from .wtt import WriteTrackingTable
 
 __all__ = ["Report", "Eidola", "run_gemv_allreduce"]
@@ -37,13 +37,15 @@ class Report:
     wtt_registered: int
     wtt_enacted: int
     wtt_head_polls: int
+    scenario: str = "gemv_allreduce"
     monitor_stats: Dict[str, int] = field(default_factory=dict)
     segments: List[Segment] = field(default_factory=list)
     meta: Dict[str, object] = field(default_factory=dict)
 
     def summary(self) -> str:
         return (
-            f"[{self.engine}/{self.sync}] flag_reads={self.flag_reads} "
+            f"[{self.scenario}|{self.engine}/{self.sync}] "
+            f"flag_reads={self.flag_reads} "
             f"nonflag_reads={self.nonflag_reads} "
             f"kernel={self.kernel_span_ns:.0f}ns "
             f"wall={self.wall_time_s * 1e3:.1f}ms"
@@ -57,6 +59,12 @@ class Eidola:
     payload).  The simulation enacts each write at
     ``wakeup_ns + cfg.xgmi_enact_latency_ns`` — the paper's wakeupTime is the
     *issue* time; visibility at the target directory includes the fabric hop.
+
+    ``scenario`` selects the detailed device's phase programs (see
+    :mod:`repro.core.scenario`); when omitted, the registered
+    ``gemv_allreduce`` scenario is used, preserving the seed behaviour of
+    raw-trace runs.  Most callers should prefer
+    :func:`repro.core.scenario.simulate`, which builds matching traces too.
     """
 
     def __init__(
@@ -64,13 +72,23 @@ class Eidola:
         cfg: SimConfig,
         traces: TraceBundle,
         *,
+        scenario: Optional[Scenario] = None,
         amap: Optional[AddressMap] = None,
         perturb=None,
         collect_segments: bool = True,
     ):
         self.cfg = cfg.validate()
         self.traces = traces
-        self.amap = amap or AddressMap(n_devices=cfg.n_devices)
+        if scenario is not None and amap is not None and scenario.amap != amap:
+            raise ValueError("scenario and Eidola were given different AddressMaps")
+        if scenario is None:
+            from .scenarios.gemv_allreduce import GemvAllReduceScenario
+
+            scenario = GemvAllReduceScenario(
+                cfg, amap or AddressMap(n_devices=cfg.n_devices)
+            )
+        self.scenario = scenario
+        self.amap = scenario.amap
         self.perturb = perturb
         self.collect_segments = collect_segments
 
@@ -86,8 +104,9 @@ class Eidola:
             if cfg.sync == SyncPolicy.SYNCMON
             else None
         )
-        workload = GemvAllReduceWorkload(cfg, self.amap)
-        device = TargetDevice(cfg, workload, memory, monitor, perturb=self.perturb)
+        device = TargetDevice(
+            cfg, self.scenario, memory, monitor, perturb=self.perturb
+        )
         wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
         for w in self.traces:
             eff = RegisteredWrite(
@@ -106,9 +125,13 @@ class Eidola:
     def run(self) -> Report:
         cfg = self.cfg
         if cfg.engine == EngineKind.VECTOR:
-            from .vector_engine import run_vectorized
-
-            return run_vectorized(self)
+            report = self.scenario.run_vectorized(self)
+            if report is None:
+                raise NotImplementedError(
+                    f"scenario {self.scenario.name!r} has no vectorized engine; "
+                    "use EngineKind.CYCLE or EngineKind.EVENT"
+                )
+            return report
         memory, monitor, device, wtt = self._build()
         engine = (
             CyclePollEngine() if cfg.engine == EngineKind.CYCLE else EventQueueEngine()
@@ -126,6 +149,7 @@ class Eidola:
             wtt_registered=wtt.stats.registered,
             wtt_enacted=wtt.stats.enacted,
             wtt_head_polls=res.head_polls,
+            scenario=self.scenario.name,
             monitor_stats=dict(monitor.stats) if monitor else {},
             segments=device.collect_segments() if self.collect_segments else [],
             meta=dict(self.traces.meta),
@@ -139,13 +163,18 @@ def run_gemv_allreduce(
     perturb=None,
     collect_segments: bool = True,
 ) -> Report:
-    """Convenience: build Table-1-style traces for ``cfg`` and simulate."""
-    amap = AddressMap(n_devices=cfg.n_devices)
-    traces = make_gemv_allreduce_traces(cfg, flag_delays_ns, amap)
+    """Convenience: build Table-1-style traces for ``cfg`` and simulate.
+
+    Kept as a thin wrapper over the registered ``gemv_allreduce`` scenario;
+    new code should call :func:`repro.core.scenario.simulate`.
+    """
+    from .scenarios.gemv_allreduce import GemvAllReduceScenario
+
+    scenario = GemvAllReduceScenario(cfg, flag_delays_ns=flag_delays_ns)
     return Eidola(
         cfg,
-        traces,
-        amap=amap,
+        scenario.traces(),
+        scenario=scenario,
         perturb=perturb,
         collect_segments=collect_segments,
     ).run()

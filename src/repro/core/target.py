@@ -1,21 +1,27 @@
-"""Detailed target-device model: per-workgroup phase state machines.
+"""Detailed target-device model: a per-workgroup phase-program interpreter.
 
 The paper simulates exactly one device in detailed timing mode; its figures
 measure (a) per-workgroup phase timelines (Figs. 1/2) and (b) memory-read
 traffic split into flag vs. non-flag categories (Figs. 6/9).  This module
-models the target at that granularity: each workgroup advances through the
-fused-kernel phases with durations from its :class:`WGPlan`; compute/memory
-phase traffic is accounted in closed form at phase completion; the *wait*
-phase interacts with the WTT-enacted peer flag writes under one of two
-synchronization policies:
+models the target at that granularity, but — unlike the seed's hardcoded
+remote -> flag -> local -> wait -> reduce -> broadcast machine — it interprets
+*phase programs as data* (:class:`repro.core.scenario.WGProgram`): each
+workgroup advances through an ordered list of timed phases (closed-form
+traffic accounted at completion) and wait phases.  A wait phase observes a
+sequence of flag addresses under one of two synchronization policies:
 
-* ``SPIN``    — sequential per-peer polling loop; one flag read per poll tick
-                while the current flag is unset, one observe read once set.
+* ``SPIN``    — sequential per-address polling loop; one flag read per poll
+                tick while the current flag is unset, one observe read once
+                set.
 * ``SYNCMON`` — check once; if unset, arm a Monitor Log entry and mwait
                 (descheduled, zero reads while waiting); on wake, a validation
                 read that may coalesce with other wavefronts woken in the same
                 cycle on the same CU (the fill triggered by the waking write
                 serves adjacent waiters).
+
+Any scenario therefore inherits the full synchronization model: ring
+all-reduce steps, all-to-all incast barriers, and pipeline microbatch
+hand-offs wait exactly the way the fused kernel's wait_flags phase does.
 
 The model is engine-agnostic: cycle-poll and event-queue engines drive the
 same transitions and therefore produce bit-identical traffic and timelines.
@@ -29,9 +35,9 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from .config import SimConfig, SyncPolicy
 from .events import RegisteredWrite, Segment
-from .memory import AddressMap, DirectoryMemory
+from .memory import DirectoryMemory
 from .monitor import MonitorLog
-from .workload import GemvAllReduceWorkload, WGPlan
+from .scenario import PhaseSpec, Scenario, WGProgram
 
 __all__ = ["TargetDevice", "EidolaDeadlock"]
 
@@ -40,77 +46,78 @@ class EidolaDeadlock(RuntimeError):
     """Raised when all workgroups are blocked and no pending writes remain."""
 
 
-# Workgroup lifecycle states.
-_PENDING = "pending"
-_REMOTE = "remote_tiles"
-_FLAGW = "flag_write"
-_LOCAL = "local_tiles"
-_WAIT = "wait"
-_REDUCE = "reduce"
-_BCAST = "broadcast"
-_DONE = "done"
-
-_PHASE_AFTER = {
-    _PENDING: _REMOTE,
-    _REMOTE: _FLAGW,
-    _FLAGW: _LOCAL,
-    _LOCAL: _WAIT,
-    _WAIT: _REDUCE,
-    _REDUCE: _BCAST,
-    _BCAST: _DONE,
-}
-
-
 @dataclass
 class _WG:
-    plan: WGPlan
-    state: str = _PENDING
+    program: WGProgram
+    phase_idx: int = -1           # -1 = not yet dispatched
     phase_start: int = 0          # cycle the current phase began
+    done: bool = False
     # wait-phase bookkeeping
+    in_wait: bool = False
     flag_idx: int = 0
     t_cursor: int = 0             # next poll/check tick (cycles)
-    blocked_on: Optional[int] = None   # peer id we are spinning/mwaiting on
+    blocked_on: Optional[int] = None   # flag address we spin/mwait on
     in_mwait: bool = False
     t_arm: int = 0                # cycle the current monitor was armed
     wait_start: int = 0
     segments: List[Segment] = field(default_factory=list)
     desched_segments: List[Tuple[int, int]] = field(default_factory=list)
 
+    @property
+    def current(self) -> Optional[PhaseSpec]:
+        if 0 <= self.phase_idx < len(self.program.phases):
+            return self.program.phases[self.phase_idx]
+        return None
+
 
 class TargetDevice:
-    """The single detailed device (device 0) of an Eidola simulation."""
+    """The single detailed device (device 0) of an Eidola simulation.
+
+    ``scenario`` provides the phase programs; for back-compat a
+    :class:`repro.core.workload.GemvAllReduceWorkload` is also accepted and
+    wrapped in the registered ``gemv_allreduce`` scenario.
+    """
 
     def __init__(
         self,
         cfg: SimConfig,
-        workload: GemvAllReduceWorkload,
+        scenario,
         memory: DirectoryMemory,
         monitor_log: Optional[MonitorLog] = None,
         perturb=None,
     ):
+        if not isinstance(scenario, Scenario):
+            from .scenarios.gemv_allreduce import GemvAllReduceScenario
+
+            scenario = GemvAllReduceScenario.from_workload(cfg, scenario)
         self.cfg = cfg
-        self.workload = workload
-        self.amap = workload.amap
+        self.scenario = scenario
+        self.amap = scenario.amap
         self.memory = memory
         self.monitor_log = monitor_log
         if cfg.sync == SyncPolicy.SYNCMON and monitor_log is None:
             raise ValueError("SYNCMON policy requires a MonitorLog")
         self.perturb = perturb
-        self.flag_order = workload.flag_order()
+
+        programs = sorted(scenario.programs(), key=lambda p: p.wg)
+        if [p.wg for p in programs] != list(range(len(programs))):
+            raise ValueError("WGProgram ids must be contiguous from 0")
+        self.wgs = [_WG(program=p) for p in programs]
+
+        # every flag address some program may wait on
+        self._watched: Set[int] = set()
+        for p in programs:
+            self._watched.update(p.wait_addresses())
         self.flag_set_cycle: Dict[int, int] = {}
-        self._addr_to_peer = {
-            self.amap.flag_addr(g): g for g in range(1, cfg.n_devices)
-        }
-        # spin mode: peer -> set of blocked wg ids
+        # spin mode: flag addr -> set of blocked wg ids
         self._spin_waiters: Dict[int, Set[int]] = {}
         # syncmon: wg -> monitor entry currently armed
         self._armed: Dict[int, object] = {}
-        self.wgs = [_WG(plan=p) for p in workload.plans]
+
         # transition list managed by the engine via (cycle, wg) pairs
         self._ready: List[Tuple[int, int]] = []
-        for wg in self.wgs:
-            d = self._dur(wg, _PENDING)
-            self._push(wg.plan.dispatch_cycle, wg.plan.wg)
+        for p in programs:
+            self._push(p.dispatch_cycle, p.wg)
         self.done_count = 0
         self.kernel_end_cycle = 0
 
@@ -139,99 +146,72 @@ class TargetDevice:
         return self.done_count == len(self.wgs)
 
     def blocked_count(self) -> int:
-        return sum(1 for w in self.wgs if w.state == _WAIT and w.blocked_on is not None)
+        return sum(1 for w in self.wgs if w.in_wait and w.blocked_on is not None)
 
     # ------------------------------------------------------------------
     # phase durations (perturbable)
     # ------------------------------------------------------------------
 
-    def _dur(self, wg: _WG, state: str) -> int:
-        p = wg.plan
-        base = {
-            _PENDING: 0,
-            _REMOTE: p.remote_cycles,
-            _FLAGW: p.flag_write_cycles,
-            _LOCAL: p.local_cycles,
-            _REDUCE: p.reduce_cycles,
-            _BCAST: p.broadcast_cycles,
-        }.get(state, 0)
+    def _dur(self, wg: _WG, spec: PhaseSpec) -> int:
+        base = spec.duration_cycles
         if self.perturb is not None and base > 0:
-            base = self.perturb.scale_phase(p.wg, state, base)
+            base = self.perturb.scale_phase(wg.program.wg, spec.name, base)
         return base
 
     # ------------------------------------------------------------------
     # phase completion accounting
     # ------------------------------------------------------------------
 
-    def _complete_phase(self, wg: _WG, state: str, start: int, end: int) -> None:
-        cfg, p = self.cfg, wg.plan
-        ns = cfg.cycles_to_ns
-        if end > start or state in (_REMOTE, _LOCAL, _FLAGW, _REDUCE, _BCAST):
-            name = {
-                _REMOTE: "remote_tiles",
-                _FLAGW: "flag_write",
-                _LOCAL: "local_tiles",
-                _WAIT: "wait_flags",
-                _REDUCE: "reduce",
-                _BCAST: "broadcast",
-            }.get(state)
-            if name and end >= start:
-                wg.segments.append(
-                    Segment(wg=p.wg, phase=name, start_ns=ns(start), end_ns=ns(end))
+    def _complete_phase(self, wg: _WG, spec: PhaseSpec, start: int, end: int) -> None:
+        ns = self.cfg.cycles_to_ns
+        # timed phases always get a timeline segment (even zero-length, as the
+        # seed's state machine did); wait phases only when time actually passed
+        if end > start or not spec.is_wait:
+            wg.segments.append(
+                Segment(
+                    wg=wg.program.wg,
+                    phase=spec.name,
+                    start_ns=ns(start),
+                    end_ns=ns(end),
                 )
-        if state == _REMOTE:
-            self.memory.bulk_reads(
-                p.remote_sector_reads, bytes_each=cfg.sector_bytes
             )
-            self.memory.issue_xgmi_out(
-                p.remote_xgmi_writes, bytes_each=cfg.elem_bytes * cfg.N
-            )
-        elif state == _FLAGW:
-            self.memory.issue_xgmi_out(len(self.flag_order), bytes_each=8)
-        elif state == _LOCAL:
-            self.memory.bulk_reads(
-                p.local_sector_reads, bytes_each=cfg.sector_bytes
-            )
-            self.memory.bulk_local_writes(
-                p.local_partial_writes, bytes_each=cfg.elem_bytes * cfg.N
-            )
-        elif state == _REDUCE:
-            self.memory.bulk_reads(p.reduce_reads, bytes_each=cfg.elem_bytes)
-        elif state == _BCAST:
-            self.memory.issue_xgmi_out(
-                p.broadcast_xgmi_writes, bytes_each=cfg.elem_bytes * cfg.N
-            )
-            self.memory.bulk_local_writes(
-                p.broadcast_local_writes, bytes_each=cfg.elem_bytes * cfg.N
-            )
+        for op in spec.traffic:
+            op.apply(self.memory)
 
     # ------------------------------------------------------------------
-    # the state machine
+    # the program interpreter
     # ------------------------------------------------------------------
 
     def _advance(self, wg: _WG, now: int) -> None:
-        if wg.state == _DONE:
+        if wg.done:
             return
-        if wg.state == _WAIT:
+        if wg.in_wait:
             self._run_wait(wg, now)
             return
-        # completing a timed phase
-        if wg.state != _PENDING:
-            self._complete_phase(wg, wg.state, wg.phase_start, now)
-        nxt = _PHASE_AFTER[wg.state]
-        wg.state = nxt
+        # completing the current timed phase (if dispatched)
+        spec = wg.current
+        if spec is not None:
+            self._complete_phase(wg, spec, wg.phase_start, now)
+        self._enter_next_phase(wg, now)
+
+    def _enter_next_phase(self, wg: _WG, now: int) -> None:
+        wg.phase_idx += 1
         wg.phase_start = now
-        if nxt == _WAIT:
+        spec = wg.current
+        if spec is None:
+            self._finish(wg, now)
+            return
+        if spec.is_wait:
+            wg.in_wait = True
             wg.flag_idx = 0
             wg.t_cursor = now
             wg.wait_start = now
             self._run_wait(wg, now)
-        elif nxt == _DONE:
-            self._finish(wg, now)
         else:
-            self._push(now + self._dur(wg, nxt), wg.plan.wg)
+            self._push(now + self._dur(wg, spec), wg.program.wg)
 
     def _finish(self, wg: _WG, now: int) -> None:
+        wg.done = True
         self.done_count += 1
         self.kernel_end_cycle = max(self.kernel_end_cycle, now)
 
@@ -241,10 +221,13 @@ class TargetDevice:
 
     def _run_wait(self, wg: _WG, now: int) -> None:
         cfg = self.cfg
+        spec = wg.current
+        assert spec is not None and spec.wait_addrs is not None
+        addrs = spec.wait_addrs
         wg.blocked_on = None
-        while wg.flag_idx < len(self.flag_order):
-            g = self.flag_order[wg.flag_idx]
-            set_c = self.flag_set_cycle.get(g)
+        while wg.flag_idx < len(addrs):
+            addr = addrs[wg.flag_idx]
+            set_c = self.flag_set_cycle.get(addr)
             if set_c is not None and set_c <= wg.t_cursor:
                 # observe-and-advance: a single read sees the flag set
                 self.memory.bulk_reads(1, bytes_each=8, flag=True)
@@ -264,8 +247,8 @@ class TargetDevice:
                     wg.flag_idx += 1
                     continue
                 # unset with unknown set time: block until notify
-                wg.blocked_on = g
-                self._spin_waiters.setdefault(g, set()).add(wg.plan.wg)
+                wg.blocked_on = addr
+                self._spin_waiters.setdefault(addr, set()).add(wg.program.wg)
                 return
             else:  # SYNCMON
                 # one check read (sees unset or not-yet-visible)
@@ -281,22 +264,19 @@ class TargetDevice:
                     wg.flag_idx += 1
                     continue
                 # arm + deschedule
-                entry = self.monitor_log.monitor(
-                    self.amap.flag_addr(g), 8, 1
-                )
-                entry.waiting_wfs.add(wg.plan.wg)
-                self._armed[wg.plan.wg] = entry
-                wg.blocked_on = g
+                entry = self.monitor_log.monitor(addr, 8, 1)
+                entry.waiting_wfs.add(wg.program.wg)
+                self._armed[wg.program.wg] = entry
+                wg.blocked_on = addr
                 wg.in_mwait = True
                 wg.t_arm = t_arm
                 wg.desched_segments.append((t_arm, -1))  # end filled on wake
                 return
         # all flags observed — wait phase completes at the poll cursor
         end = wg.t_cursor
-        self._complete_phase(wg, _WAIT, wg.wait_start, end)
-        wg.state = _REDUCE
-        wg.phase_start = end
-        self._push(end + self._dur(wg, _REDUCE), wg.plan.wg)
+        self._complete_phase(wg, spec, wg.wait_start, end)
+        wg.in_wait = False
+        self._enter_next_phase(wg, end)
 
     # ------------------------------------------------------------------
     # peer-write enactment hooks (called by the engines)
@@ -309,15 +289,13 @@ class TargetDevice:
         observers).  Here we resolve flag visibility for blocked workgroups.
         """
         cfg = self.cfg
-        woken: List[int] = []
         for w in writes:
-            peer = self._addr_to_peer.get(w.addr)
-            if peer is None:
+            if w.addr not in self._watched:
                 continue
-            if peer not in self.flag_set_cycle:
-                self.flag_set_cycle[peer] = cycle
+            if w.addr not in self.flag_set_cycle:
+                self.flag_set_cycle[w.addr] = cycle
             if cfg.sync == SyncPolicy.SPIN:
-                waiters = self._spin_waiters.pop(peer, set())
+                waiters = self._spin_waiters.pop(w.addr, set())
                 for wg_id in sorted(waiters):
                     wg = self.wgs[wg_id]
                     # account the polls from t_cursor up to the observation tick
@@ -358,7 +336,7 @@ class TargetDevice:
                     wg.t_cursor = wg.t_arm + cfg.flag_check_cycles
                     self._push(wg.t_cursor, wg_id)
                     continue
-                groups.setdefault((wake_c, wg.plan.cu), []).append(wg_id)
+                groups.setdefault((wake_c, wg.program.cu), []).append(wg_id)
             for (wake_c, _cu), members in sorted(groups.items()):
                 n_reads = math.ceil(len(members) / max(1, cfg.wake_coalesce_width))
                 self.memory.bulk_reads(n_reads, bytes_each=8, flag=True)
@@ -370,17 +348,17 @@ class TargetDevice:
                     if wg.desched_segments and wg.desched_segments[-1][1] == -1:
                         st = wg.desched_segments[-1][0]
                         wg.desched_segments[-1] = (st, wake_c)
-                    jitter = wg.plan.wg % max(1, cfg.requeue_jitter_mod)
+                    jitter = wg.program.wg % max(1, cfg.requeue_jitter_mod)
                     resume = wake_c + jitter
                     # the coalesced validation read observed the blocking flag;
                     # if it is (now) set, advance past it without another read
-                    g = wg.blocked_on
-                    set_c = self.flag_set_cycle.get(g)
+                    addr = wg.blocked_on
+                    set_c = self.flag_set_cycle.get(addr)
                     if set_c is not None and set_c <= resume:
                         wg.flag_idx += 1
                     wg.blocked_on = None
                     wg.t_cursor = resume + cfg.flag_check_cycles
-                    self._push(wg.t_cursor, wg.plan.wg)
+                    self._push(wg.t_cursor, wg.program.wg)
 
     # ------------------------------------------------------------------
     # results
@@ -395,7 +373,7 @@ class TargetDevice:
                 if en >= st >= 0:
                     segs.append(
                         Segment(
-                            wg=wg.plan.wg,
+                            wg=wg.program.wg,
                             phase="descheduled",
                             start_ns=ns(st),
                             end_ns=ns(en),

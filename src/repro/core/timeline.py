@@ -10,19 +10,9 @@ from __future__ import annotations
 import json
 from typing import Dict, Iterable, List, Optional, Sequence
 
-from .events import PHASE_COLORS, Segment
+from .events import PHASE_COLORS, PHASE_GLYPHS as _GLYPH, Segment
 
 __all__ = ["to_chrome_trace", "to_csv", "ascii_timeline", "phase_totals"]
-
-_GLYPH = {
-    "remote_tiles": "g",
-    "flag_write": "B",
-    "local_tiles": "G",
-    "wait_flags": "r",
-    "reduce": "b",
-    "broadcast": "^",
-    "descheduled": ".",
-}
 
 
 def to_chrome_trace(

@@ -24,7 +24,10 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["pipeline_apply", "bubble_fraction", "stack_stage_params"]

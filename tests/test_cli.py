@@ -38,3 +38,36 @@ def test_serve_cli_runs():
         "--prompt-len", "8", "--new-tokens", "4", "--max-batch", "2",
     ])
     assert "tok/s" in out
+
+
+def test_scenario_cli_lists_and_runs():
+    out = _run(["repro.launch.scenario", "--list"])
+    for name in ("gemv_allreduce", "ring_allreduce", "all_to_all",
+                 "pipeline_p2p"):
+        assert name in out
+    out = _run([
+        "repro.launch.scenario", "--scenario", "ring_allreduce",
+        "--engines", "cycle,event", "--sync", "syncmon",
+        "-p", "workgroups=16",
+    ])
+    lines = [l for l in out.strip().splitlines() if l.startswith("[")]
+    assert len(lines) == 2
+    # both engines printed the same traffic counts
+    counts = {
+        (l.split("flag_reads=")[1].split()[0],
+         l.split("nonflag_reads=")[1].split()[0])
+        for l in lines
+    }
+    assert len(counts) == 1
+
+
+def test_scenario_cli_sweep_csv(tmp_path):
+    csv_path = str(tmp_path / "sweep.csv")
+    out = _run([
+        "repro.launch.scenario", "--scenario", "gemv_allreduce",
+        "--sweep", "flag_delays_ns=0,8000", "-p", "workgroups=16",
+        "--csv", csv_path,
+    ])
+    assert out.splitlines()[0].startswith("scenario,engine")
+    with open(csv_path) as f:
+        assert len(f.read().strip().splitlines()) == 3  # header + 2 rows

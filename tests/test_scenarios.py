@@ -1,0 +1,298 @@
+"""Scenario API tests: registry round-trip, cross-engine equivalence for every
+registered scenario, seed-number preservation, sweeps, and program validation."""
+
+import pytest
+
+from repro.core import (
+    AddressMap,
+    EngineKind,
+    PhaseSpec,
+    Scenario,
+    SimConfig,
+    SweepRunner,
+    SyncPolicy,
+    TraceBundle,
+    TrafficOp,
+    WGProgram,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    run_gemv_allreduce,
+    simulate,
+)
+from repro.core.scenario import _REGISTRY
+from repro.core.scenarios import GemvAllReduceScenario
+
+# small-but-nontrivial config so the cycle engine stays fast
+FAST = SimConfig(workgroups=24, n_cus=4)
+
+
+def _segments_key(report):
+    return sorted(
+        (s.wg, s.phase, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in report.segments
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    names = list_scenarios()
+    assert len(names) >= 4
+    for expected in ("gemv_allreduce", "ring_allreduce", "all_to_all",
+                     "pipeline_p2p"):
+        assert expected in names
+        assert get_scenario(expected).name == expected
+
+
+def test_registry_round_trip_and_duplicate_rejection():
+    @register_scenario
+    class _Tiny(Scenario):
+        name = "_tiny_test_scenario"
+
+        def programs(self):
+            return [
+                WGProgram(
+                    wg=0, cu=0, dispatch_cycle=0,
+                    phases=(
+                        PhaseSpec("wait_flags",
+                                  wait_addrs=(self.amap.flag_addr(1),)),
+                        PhaseSpec("reduce", 10,
+                                  traffic=(TrafficOp("reads", 5, 32),)),
+                    ),
+                )
+            ]
+
+        def traces(self):
+            b = TraceBundle(meta={"scenario": self.name})
+            b.add(wakeup_ns=100.0, addr=self.amap.flag_addr(1), data=1,
+                  size=8, src=1)
+            return b
+
+    try:
+        assert get_scenario("_tiny_test_scenario") is _Tiny
+        assert "_tiny_test_scenario" in list_scenarios()
+        with pytest.raises(ValueError):
+            @register_scenario
+            class _Clash(Scenario):
+                name = "_tiny_test_scenario"
+
+                def programs(self):
+                    return []
+
+                def traces(self):
+                    return TraceBundle()
+
+        r = simulate("_tiny_test_scenario", FAST, collect_segments=False)
+        assert r.nonflag_reads == 5
+        assert r.flag_reads >= 1
+    finally:
+        _REGISTRY.pop("_tiny_test_scenario", None)
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        get_scenario("definitely_not_registered")
+
+
+# ---------------------------------------------------------------------------
+# cross-engine equivalence for every registered scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(set(list_scenarios())))
+@pytest.mark.parametrize("sync", [SyncPolicy.SPIN, SyncPolicy.SYNCMON])
+def test_cycle_event_bit_identical(name, sync):
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(sync=sync, engine=eng)
+        reports[eng] = simulate(name, cfg)
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.traffic == b.traffic
+    assert a.flag_reads == b.flag_reads
+    assert a.nonflag_reads == b.nonflag_reads
+    assert a.kernel_span_ns == pytest.approx(b.kernel_span_ns)
+    assert _segments_key(a) == _segments_key(b)
+    assert a.monitor_stats == b.monitor_stats
+
+
+def test_gemv_scenario_matches_vector_engine():
+    reports = [
+        simulate("gemv_allreduce", FAST.with_(engine=eng),
+                 flag_delays_ns=9_000.0, collect_segments=False)
+        for eng in (EngineKind.CYCLE, EngineKind.EVENT, EngineKind.VECTOR)
+    ]
+    assert reports[0].traffic == reports[1].traffic == reports[2].traffic
+
+
+def test_vector_engine_rejected_for_non_gemv():
+    with pytest.raises(NotImplementedError):
+        simulate("ring_allreduce", FAST.with_(engine=EngineKind.VECTOR),
+                 collect_segments=False)
+
+
+# ---------------------------------------------------------------------------
+# seed-number preservation (Table 1)
+# ---------------------------------------------------------------------------
+
+
+def test_back_compat_wrapper_reproduces_table1():
+    r = run_gemv_allreduce(SimConfig(), 10_000.0, collect_segments=False)
+    assert r.nonflag_reads == 65_792  # the paper's "approximately 66K"
+    assert r.scenario == "gemv_allreduce"
+
+
+def test_simulate_equals_back_compat_wrapper():
+    cfg = SimConfig(sync=SyncPolicy.SPIN, engine=EngineKind.EVENT)
+    a = run_gemv_allreduce(cfg, 12_345.0)
+    b = simulate("gemv_allreduce", cfg, flag_delays_ns=12_345.0)
+    assert a.traffic == b.traffic
+    assert _segments_key(a) == _segments_key(b)
+
+
+# ---------------------------------------------------------------------------
+# scenario semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ring_allreduce_has_per_step_flags():
+    cfg = FAST
+    sc = get_scenario("ring_allreduce")(cfg)
+    assert sc.steps == 2 * (cfg.n_devices - 1)
+    flags = [w for w in sc.traces() if sc.amap.is_flag(w.addr)]
+    assert len(flags) == sc.steps
+    assert len({w.addr for w in flags}) == sc.steps  # distinct slot per step
+
+
+def test_all_to_all_flag_traffic_grows_with_skew_under_spin():
+    lo = simulate("all_to_all", FAST.with_(engine=EngineKind.EVENT),
+                  skew_ns=0.0, collect_segments=False)
+    hi = simulate("all_to_all", FAST.with_(engine=EngineKind.EVENT),
+                  skew_ns=20_000.0, collect_segments=False)
+    assert hi.flag_reads > lo.flag_reads
+    assert hi.nonflag_reads == lo.nonflag_reads
+
+
+def test_pipeline_waits_once_per_microbatch():
+    cfg = FAST.with_(engine=EngineKind.EVENT, sync=SyncPolicy.SYNCMON)
+    r = simulate("pipeline_p2p", cfg, n_microbatches=5)
+    waits = [s for s in r.segments if s.phase == "wait_flags" and s.wg == 0]
+    assert len(waits) == 5
+
+
+def test_syncmon_cuts_flag_reads_on_every_scenario():
+    for name in ("ring_allreduce", "all_to_all", "pipeline_p2p"):
+        spin = simulate(name, FAST.with_(sync=SyncPolicy.SPIN,
+                                         engine=EngineKind.EVENT),
+                        collect_segments=False)
+        mon = simulate(name, FAST.with_(sync=SyncPolicy.SYNCMON,
+                                        engine=EngineKind.EVENT),
+                       collect_segments=False)
+        assert mon.flag_reads < spin.flag_reads, name
+        assert mon.nonflag_reads == spin.nonflag_reads, name
+
+
+def test_scenario_instance_and_class_accepted_by_simulate():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    by_name = simulate("gemv_allreduce", cfg, flag_delays_ns=5_000.0,
+                       collect_segments=False)
+    by_cls = simulate(GemvAllReduceScenario, cfg, flag_delays_ns=5_000.0,
+                      collect_segments=False)
+    inst = GemvAllReduceScenario(cfg, flag_delays_ns=5_000.0)
+    by_inst = simulate(inst, cfg, collect_segments=False)
+    assert by_name.traffic == by_cls.traffic == by_inst.traffic
+    with pytest.raises(ValueError):
+        simulate(inst, cfg, flag_delays_ns=1.0)  # params + instance conflict
+
+
+def test_simulate_uses_instance_cfg_and_rejects_mismatch():
+    cfg = FAST.with_(sync=SyncPolicy.SYNCMON, engine=EngineKind.EVENT)
+    inst = GemvAllReduceScenario(cfg, flag_delays_ns=5_000.0)
+    r = simulate(inst, collect_segments=False)  # no cfg: instance's is used
+    assert r.sync == "syncmon"
+    assert len({s.wg for s in simulate(inst).segments}) == cfg.workgroups
+    with pytest.raises(ValueError):
+        simulate(inst, FAST.with_(workgroups=99))  # different cfg: error
+
+
+# ---------------------------------------------------------------------------
+# sweeps
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_runner_splits_cfg_and_scenario_params():
+    runner = SweepRunner(
+        "gemv_allreduce",
+        FAST,
+        engines=(EngineKind.EVENT, EngineKind.VECTOR),
+    )
+    points = runner.run(
+        flag_delays_ns=[0.0, 8_000.0],  # scenario param
+        n_egpus=[3, 7],                 # SimConfig field (M stays divisible)
+    )
+    assert len(points) == 2 * 2 * 2
+    for p in points:
+        assert set(p.overrides) == {"n_egpus"}
+        assert set(p.params) == {"flag_delays_ns"}
+    # engines agree pointwise on traffic
+    by_key = {}
+    for p in points:
+        key = (p.overrides["n_egpus"], p.params["flag_delays_ns"])
+        by_key.setdefault(key, []).append(p)
+    for key, pts in by_key.items():
+        assert pts[0].report.traffic == pts[1].report.traffic, key
+    csv = SweepRunner.to_csv(points)
+    assert csv.splitlines()[0].startswith("scenario,engine")
+    assert len(csv.splitlines()) == 1 + len(points)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_op_validation():
+    with pytest.raises(ValueError):
+        TrafficOp("warp_drive", 1, 8)
+    with pytest.raises(ValueError):
+        TrafficOp("reads", -1, 8)
+
+
+def test_segment_rejects_unregistered_phase():
+    from repro.core import Segment
+
+    with pytest.raises(ValueError):
+        Segment(wg=0, phase="not_a_phase", start_ns=0.0, end_ns=1.0)
+
+
+def test_address_map_flag_slots():
+    amap = AddressMap(n_devices=4, flag_slots=6)
+    addrs = {amap.flag_addr(d, slot=s) for d in range(4) for s in range(6)}
+    assert len(addrs) == 24
+    lo, hi = amap.flag_region()
+    assert all(lo <= a < hi for a in addrs)
+    assert all(amap.is_flag(a) for a in addrs)
+    # slot 0 keeps the seed layout
+    assert amap.flag_addr(2) == AddressMap(n_devices=4).flag_addr(2)
+    with pytest.raises(ValueError):
+        amap.flag_addr(0, slot=6)
+
+
+def test_wg_programs_must_be_contiguous():
+    class _Bad(Scenario):
+        name = "_bad"
+
+        def programs(self):
+            return [WGProgram(wg=3, cu=0, dispatch_cycle=0, phases=())]
+
+        def traces(self):
+            return TraceBundle()
+
+    from repro.core import Eidola
+
+    sc = _Bad(FAST)
+    with pytest.raises(ValueError):
+        Eidola(FAST, sc.traces(), scenario=sc).run()
