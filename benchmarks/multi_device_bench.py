@@ -1,0 +1,97 @@
+"""Closed-loop multi-device scaling benchmark — the perf trajectory seed.
+
+Sweeps device counts on the event engine for every closed-loop-capable
+scenario and records simulated span, aggregate traffic, and wall time, so
+future performance PRs have a multi-device baseline to compare against
+(`BENCH_multi_device.json`).  A cross-engine spot check at the smallest
+device count guards the cycle/event bit-identity on every benchmark run.
+
+Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
+     [--quick] [--out BENCH_multi_device.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+CLOSED_LOOP_SCENARIOS = ("ring_allreduce", "all_to_all", "pipeline_p2p")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config + small device counts (CI smoke)")
+    ap.add_argument("--out", default="BENCH_multi_device.json")
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated device counts (default 4,8,16,32)")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.core import EngineKind, SimConfig, simulate
+
+    if args.devices:
+        device_counts = [int(x) for x in args.devices.split(",")]
+    else:
+        device_counts = [2, 4] if args.quick else [4, 8, 16, 32]
+    base = SimConfig(
+        workgroups=16 if args.quick else 64,
+        engine=EngineKind.EVENT,
+    )
+
+    rows = []
+    print(f"{'scenario':16s} {'devices':>7s} {'span_ns':>12s} "
+          f"{'flag_reads':>11s} {'wtt_enacted':>11s} {'wall_ms':>9s}")
+    for name in CLOSED_LOOP_SCENARIOS:
+        for nd in device_counts:
+            r = simulate(name, base, devices=nd, closed_loop=True,
+                         collect_segments=False)
+            rows.append({
+                "scenario": name,
+                "devices": nd,
+                "engine": r.engine,
+                "sync": r.sync,
+                "workgroups": base.workgroups,
+                "flag_reads": r.flag_reads,
+                "nonflag_reads": r.nonflag_reads,
+                "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
+                "wtt_enacted": r.wtt_enacted,
+                "kernel_span_ns": r.kernel_span_ns,
+                "sim_cycles": r.sim_cycles,
+                "wall_time_s": r.wall_time_s,
+            })
+            print(f"{name:16s} {nd:>7d} {r.kernel_span_ns:>12,.0f} "
+                  f"{r.flag_reads:>11,} {r.wtt_enacted:>11,} "
+                  f"{r.wall_time_s * 1e3:>9.2f}")
+
+    # cross-engine spot check at the smallest device count: the cycle and
+    # event engines must stay bit-identical in the closed loop
+    agree = True
+    nd = device_counts[0]
+    for name in CLOSED_LOOP_SCENARIOS:
+        pair = {}
+        for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+            r = simulate(name, base.with_(engine=eng), devices=nd,
+                         closed_loop=True, collect_segments=False)
+            pair[eng.value] = (r.flag_reads, r.nonflag_reads, r.kernel_span_ns)
+        if pair["cycle"] != pair["event"]:
+            agree = False
+            print(f"[bench] ENGINE MISMATCH {name} devices={nd}: {pair}")
+    print(f"[bench] multi_device {'PASS' if agree else 'FAIL'} "
+          f"({len(rows)} rows)")
+
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows, "engines_agree": agree}, f, indent=1)
+    print(f"[bench] wrote {args.out}")
+    if not agree:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,12 +2,14 @@
 contribution), plus the compiled-HLO capture bridge that makes it a
 first-class feature of the training framework."""
 
+from .cluster import Cluster, ClusterNode
 from .config import EngineKind, SimConfig, SyncPolicy
 from .events import PHASES, RegisteredWrite, Segment, TraceBundle, register_phase
 from .memory import AddressMap, DirectoryMemory, TrafficCounters
 from .monitor import MonitorEntry, MonitorLog
 from .perturb import GaussianPerturb, NullPerturb, PeerDelayPerturb
 from .scenario import (
+    EmitOp,
     PhaseSpec,
     Scenario,
     SweepPoint,
@@ -21,6 +23,7 @@ from .scenario import (
 )
 from .simulator import Eidola, Report, run_gemv_allreduce
 from .target import EidolaDeadlock, TargetDevice
+from .topology import FabricModel, HardwareSpec, Topology
 from .workload import GemvAllReduceWorkload, make_gemv_allreduce_traces
 from .wtt import WriteTrackingTable
 
@@ -30,11 +33,13 @@ __all__ = [
     "AddressMap", "DirectoryMemory", "TrafficCounters",
     "MonitorEntry", "MonitorLog",
     "GaussianPerturb", "NullPerturb", "PeerDelayPerturb",
-    "PhaseSpec", "Scenario", "SweepPoint", "SweepRunner", "TrafficOp",
-    "WGProgram", "get_scenario", "list_scenarios", "register_scenario",
-    "simulate",
+    "EmitOp", "PhaseSpec", "Scenario", "SweepPoint", "SweepRunner",
+    "TrafficOp", "WGProgram", "get_scenario", "list_scenarios",
+    "register_scenario", "simulate",
     "Eidola", "Report", "run_gemv_allreduce",
     "EidolaDeadlock", "TargetDevice",
+    "Cluster", "ClusterNode",
+    "FabricModel", "HardwareSpec", "Topology",
     "GemvAllReduceWorkload", "make_gemv_allreduce_traces",
     "WriteTrackingTable",
 ]

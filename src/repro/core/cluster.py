@@ -1,0 +1,279 @@
+"""Closed-loop multi-device simulation: N program-driven devices, one fabric.
+
+The paper's headline claim is modeling "synchronization behavior across large
+multi-GPU configurations", but open-loop replay can never show one device's
+perturbation rippling to another: eidolon flag-write times are synthesized up
+front.  A :class:`Cluster` closes the loop — every device runs its own
+phase-program interpreter (:class:`repro.core.target.TargetDevice` with its
+own :class:`DirectoryMemory`, :class:`MonitorLog`, and
+:class:`WriteTrackingTable`), and a completing phase *emits* xGMI writes
+(:class:`repro.core.scenario.EmitOp`) that are routed over the fabric model
+(:class:`repro.core.topology.FabricModel`: per-hop latency + per-egress-link
+serialization/contention) and registered into the destination device's WTT.
+Step-k flags are therefore written only when the emitting device actually
+finishes step k, so a slow reduce on one rank measurably delays every
+downstream rank.
+
+Open-loop replay remains the degenerate case: a cluster of one detailed
+device whose WTT was pre-loaded with a trace bundle is exactly the classic
+:class:`repro.core.simulator.Eidola` run (same engines, same node type).
+
+Determinism: emissions happen at phase completions, whose global order is
+identical under both engines (writes before transitions, devices in id
+order), and the fabric's contention state is updated in that order — so
+cycle/event runs stay bit-identical, which the tests assert per scenario.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Union
+
+from .config import EngineKind, SimConfig, SyncPolicy
+from .engine import CyclePollEngine, EventQueueEngine
+from .events import RegisteredWrite, Segment
+from .memory import DirectoryMemory
+from .monitor import MonitorLog
+from .scenario import EmitOp, PhaseSpec, Scenario
+from .target import TargetDevice
+from .topology import V5E, FabricModel
+from .wtt import WriteTrackingTable
+
+__all__ = ["Cluster", "ClusterNode"]
+
+# perturb may be one object applied to every device, or a per-device mapping
+PerturbLike = Union[None, object, Dict[int, object]]
+
+
+@dataclass
+class ClusterNode:
+    """One simulated device: interpreter + private memory/monitor/WTT."""
+
+    device_id: int
+    memory: DirectoryMemory
+    monitor: Optional[MonitorLog]
+    target: TargetDevice
+    wtt: WriteTrackingTable
+
+
+class Cluster:
+    """N detailed devices in one closed simulation loop.
+
+    ``scenario`` must have been built with ``closed_loop=True`` (its
+    ``programs_for(d)`` yields per-rank programs whose phases carry
+    :class:`EmitOp`\\ s); ``scenario.traces_for(d)`` seeds each device's WTT
+    (normally empty in closed loop — flags are emitted at run time).
+
+    ``perturb`` may be a single perturbation object (applied to every device;
+    note phase jitter is then *correlated* across devices because it is keyed
+    by (wg, phase) only) or a mapping ``{device_id: perturb}`` to disturb
+    specific ranks — the knob the propagation experiments turn.
+    """
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        scenario: Scenario,
+        *,
+        perturb: PerturbLike = None,
+        collect_segments: bool = True,
+        fabric: Optional[FabricModel] = None,
+    ):
+        self.cfg = cfg.validate()
+        self.scenario = scenario
+        self.amap = scenario.amap
+        self.perturb = perturb
+        self.collect_segments = collect_segments
+        self.fabric = fabric or FabricModel(
+            cfg.n_devices, hw=getattr(scenario, "hw", V5E)
+        )
+        self._seq = itertools.count()
+        # (src_device, phase_idx, emit_idx) -> completions seen (coalescing)
+        self._emit_counts: Dict[tuple, int] = {}
+        # dst device -> marker data writes placed so far (address spacing)
+        self._data_marks: Dict[int, int] = {}
+
+        self.nodes: List[ClusterNode] = []
+        for d in range(cfg.n_devices):
+            memory = DirectoryMemory(self.amap)
+            monitor = (
+                MonitorLog(
+                    memory,
+                    semantics=cfg.monitor_semantics,  # type: ignore[arg-type]
+                    wake_latency_cycles=cfg.wake_latency_cycles,
+                )
+                if cfg.sync == SyncPolicy.SYNCMON
+                else None
+            )
+            target = TargetDevice(
+                cfg,
+                scenario,
+                memory,
+                monitor,
+                perturb=self._perturb_for(d),
+                device_id=d,
+                emit_sink=self._on_emit,
+            )
+            wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
+            self.nodes.append(ClusterNode(d, memory, monitor, target, wtt))
+
+        # seed traces (the open-loop degenerate case / warm-start writes) get
+        # the same xGMI visibility treatment as the Eidola facade
+        for node in self.nodes:
+            for w in scenario.traces_for(node.device_id):
+                eff = replace(
+                    w, wakeup_ns=w.wakeup_ns + cfg.xgmi_enact_latency_ns
+                )
+                p = self._perturb_for(node.device_id)
+                if p is not None:
+                    eff = p.jitter_write(eff)
+                node.wtt.register(eff)
+
+    # ------------------------------------------------------------------
+    # emission: phase completion -> fabric -> destination WTT
+    # ------------------------------------------------------------------
+
+    def _perturb_for(self, device: int):
+        if isinstance(self.perturb, dict):
+            return self.perturb.get(device)
+        return self.perturb
+
+    def _on_emit(
+        self, src: int, wg_id: int, phase_idx: int, spec: PhaseSpec, cycle: int
+    ) -> None:
+        """TargetDevice sink: fire ``spec.emits`` for a completed phase."""
+        n_wgs = len(self.nodes[src].target.wgs)
+        for i, op in enumerate(spec.emits):
+            if op.coalesce == "last":
+                key = (src, phase_idx, i)
+                seen = self._emit_counts.get(key, 0) + 1
+                self._emit_counts[key] = seen
+                if seen < n_wgs:
+                    continue
+            self._route(src, op, cycle)
+
+    def _route(self, src: int, op: EmitOp, cycle: int) -> None:
+        cfg = self.cfg
+        if op.dst >= cfg.n_devices:
+            raise ValueError(
+                f"EmitOp.dst {op.dst} out of range for {cfg.n_devices} devices"
+            )
+        # the flag write itself is fabric traffic out of the emitting device;
+        # payload bytes are accounted by the phase's own TrafficOps
+        self.nodes[src].memory.issue_xgmi_out(1, bytes_each=op.size)
+        issue_ns = cfg.cycles_to_ns(cycle)
+        arrival_ns = self.fabric.transfer(
+            src, op.dst, op.payload_bytes + op.size, issue_ns
+        )
+        arrival_ns += cfg.xgmi_enact_latency_ns
+        addr = op.addr if op.addr is not None else self.amap.flag_addr(src, op.slot)
+        if cfg.include_data_writes and op.data_writes > 0:
+            lead = min(cfg.data_write_lead_ns, arrival_ns)
+            t0 = arrival_ns - lead
+            base = self._data_marks.get(op.dst, 0)
+            self._data_marks[op.dst] = base + op.data_writes
+            for k in range(op.data_writes):
+                t = t0 + lead * (k + 1) / (op.data_writes + 1)
+                self._register(
+                    op.dst,
+                    RegisteredWrite(
+                        wakeup_ns=t,
+                        addr=self.amap.partial_base + (base + k) * 64,
+                        data=0xC0 + (src % 16),
+                        size=8,
+                        src=src,
+                        seq=next(self._seq),
+                    ),
+                    cycle,
+                )
+        self._register(
+            op.dst,
+            RegisteredWrite(
+                wakeup_ns=arrival_ns,
+                addr=addr,
+                data=op.data,
+                size=op.size,
+                src=src,
+                seq=next(self._seq),
+            ),
+            cycle,
+        )
+
+    def _register(self, dst: int, w: RegisteredWrite, issue_cycle: int) -> None:
+        """Register ``w`` in ``dst``'s WTT, enforcing causality.
+
+        A write emitted at ``issue_cycle`` can never become visible in the
+        same cycle (jitter perturbations could otherwise pull it into the
+        past, which the two engines would order differently).
+        """
+        p = self._perturb_for(dst)
+        if p is not None:
+            w = p.jitter_write(w)
+        min_ns = self.cfg.cycles_to_ns(issue_cycle + 1)
+        if w.wakeup_ns < min_ns:
+            w = replace(w, wakeup_ns=min_ns)
+        self.nodes[dst].wtt.register(w)
+
+    # ------------------------------------------------------------------
+    # running
+    # ------------------------------------------------------------------
+
+    def run(self):
+        """Drive all devices to completion; return an aggregate Report."""
+        from .simulator import Report  # late import (simulator imports target)
+
+        cfg = self.cfg
+        if cfg.engine == EngineKind.VECTOR:
+            raise NotImplementedError(
+                "closed-loop cluster simulation requires EngineKind.CYCLE or "
+                "EngineKind.EVENT (the vectorized engine is replay-only)"
+            )
+        engine = (
+            CyclePollEngine() if cfg.engine == EngineKind.CYCLE else EventQueueEngine()
+        )
+        res = engine.run_nodes([(n.target, n.wtt) for n in self.nodes])
+
+        traffic: Dict[str, int] = {}
+        per_device: Dict[int, Dict[str, int]] = {}
+        monitor_stats: Dict[str, int] = {}
+        segments: List[Segment] = []
+        spans: Dict[int, float] = {}
+        for node in self.nodes:
+            td = node.memory.traffic.as_dict()
+            per_device[node.device_id] = td
+            for k, v in td.items():
+                traffic[k] = traffic.get(k, 0) + v
+            if node.monitor is not None:
+                for k, v in node.monitor.stats.items():
+                    monitor_stats[k] = monitor_stats.get(k, 0) + v
+            spans[node.device_id] = cfg.cycles_to_ns(
+                node.target.kernel_end_cycle
+            )
+            if self.collect_segments:
+                segments.extend(node.target.collect_segments())
+        return Report(
+            engine=engine.name,
+            sync=cfg.sync.value,
+            traffic=traffic,
+            flag_reads=traffic.get("flag_reads", 0),
+            nonflag_reads=traffic.get("nonflag_reads", 0),
+            kernel_span_ns=max(spans.values()) if spans else 0.0,
+            sim_cycles=res.sim_cycles,
+            wall_time_s=res.wall_time_s,
+            wtt_registered=sum(n.wtt.stats.registered for n in self.nodes),
+            wtt_enacted=sum(n.wtt.stats.enacted for n in self.nodes),
+            wtt_head_polls=res.head_polls,
+            scenario=self.scenario.name,
+            monitor_stats=monitor_stats,
+            segments=segments,
+            meta={
+                "closed_loop": True,
+                "device_spans_ns": spans,
+                "fabric": dict(self.fabric.stats),
+                **{f"param_{k}": v for k, v in self.scenario.params.items()},
+            },
+            n_devices=cfg.n_devices,
+            per_device=per_device,
+            closed_loop=True,
+        )

@@ -148,6 +148,16 @@ class SimConfig:
     def with_(self, **kw) -> "SimConfig":
         return replace(self, **kw)
 
+    def with_devices(self, devices: int) -> "SimConfig":
+        """Total-device-count sugar: ``n_egpus = devices - 1``.
+
+        The single conversion point for every ``devices=`` surface
+        (``simulate``, ``SweepRunner`` grids, the ``--devices`` CLI flag).
+        """
+        if devices < 2:
+            raise ValueError("devices must be >= 2 (one target + peers)")
+        return self.with_(n_egpus=int(devices) - 1)
+
     def validate(self) -> "SimConfig":
         """Scenario-independent sanity checks.
 

@@ -12,21 +12,29 @@ must produce bit-identical traffic counts and timelines (tested):
 * ``VectorEngine`` lives in ``vector_engine.py`` — a closed-form, vectorized
   batch replay exploiting the fact that eidolons are replay-only (their
   traffic is independent of target state), our TPU-idiomatic rethink.
+
+Both cycle and event engines drive *N* devices on one unified loop: a node is
+a ``(TargetDevice, WriteTrackingTable)`` pair, and the classic single-device
+open-loop run is just the one-node case.  Intra-cycle ordering is fixed —
+writes enact before device transitions, devices in id order — which is what
+keeps the two engines bit-identical even when devices emit writes into each
+other's WTTs mid-run (closed-loop clusters).
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Sequence, Tuple
 
-from .config import SimConfig
 from .target import EidolaDeadlock, TargetDevice
 from .wtt import WriteTrackingTable
 
 __all__ = ["CyclePollEngine", "EventQueueEngine", "EngineResult"]
 
 _MAX_CYCLES = 2_000_000_000  # runaway guard
+
+Node = Tuple[TargetDevice, WriteTrackingTable]
 
 
 @dataclass
@@ -36,77 +44,140 @@ class EngineResult:
     head_polls: int
 
 
+def _fmt_ids(ids: Sequence[int]) -> str:
+    """Compress sorted ids into range notation: [0,1,2,5] -> '0-2,5'."""
+    if not ids:
+        return ""
+    parts: List[str] = []
+    start = prev = ids[0]
+    for i in list(ids[1:]) + [None]:  # type: ignore[list-item]
+        if i is not None and i == prev + 1:
+            prev = i
+            continue
+        parts.append(str(start) if start == prev else f"{start}-{prev}")
+        if i is not None:
+            start = prev = i
+    return ",".join(parts)
+
+
+def _deadlock_message(nodes: Sequence[Node], cycle: int) -> str:
+    """Actionable deadlock report: scenario, blocked WGs, unsatisfied flags."""
+    scenario = nodes[0][0].scenario.name or "<unnamed>"
+    total = sum(dev.blocked_count() for dev, _ in nodes)
+    details: List[str] = []
+    for dev, _ in nodes:
+        for addr, wgs in sorted(dev.blocked_waits().items()):
+            decoded = dev.amap.decode_flag(addr)
+            where = f"flag 0x{addr:x}"
+            if decoded is not None:
+                where += f" (src_device={decoded[0]}, slot={decoded[1]})"
+            details.append(
+                f"device {dev.device_id}: wg {_fmt_ids(wgs)} waiting on {where}"
+            )
+    msg = (
+        f"deadlock in scenario {scenario!r}: all queues empty at cycle "
+        f"{cycle} with {total} workgroups blocked"
+    )
+    if details:
+        msg += " [" + "; ".join(details) + "]"
+    return msg + " (missing peer flag writes in the trace, or an EmitOp never fired?)"
+
+
+def _all_idle(nodes: Sequence[Node]) -> bool:
+    return all(dev.all_done and wtt.empty for dev, wtt in nodes)
+
+
 class CyclePollEngine:
     """Per-cycle WTT head polling, exactly as the paper describes."""
 
     name = "cycle"
 
     def run(self, device: TargetDevice, wtt: WriteTrackingTable) -> EngineResult:
+        return self.run_nodes([(device, wtt)])
+
+    def run_nodes(self, nodes: Sequence[Node]) -> EngineResult:
         t0 = time.perf_counter()
         cycle = -1
-        while not (device.all_done and wtt.empty):
+        while not _all_idle(nodes):
             cycle += 1
             if cycle > _MAX_CYCLES:
+                # not the empty-queue deadlock: queues still hold work, the
+                # simulation just ran away — report what is pending instead
+                scenario = nodes[0][0].scenario.name or "<unnamed>"
+                pending = sum(len(wtt) for _, wtt in nodes)
+                blocked = sum(dev.blocked_count() for dev, _ in nodes)
                 raise EidolaDeadlock(
-                    f"exceeded {_MAX_CYCLES} cycles; "
-                    f"{device.blocked_count()} workgroups blocked"
+                    f"scenario {scenario!r} exceeded {_MAX_CYCLES} cycles with "
+                    f"{pending} WTT writes pending and {blocked} workgroups "
+                    "blocked (runaway span or livelock, not an empty-queue "
+                    "deadlock)"
                 )
-            # (1) the per-cycle O(1) head check; enact due writes
-            due = wtt.poll(cycle)
-            if due:
-                for w in due:
-                    device.memory.enact_xgmi_write(w, cycle)
-                device.on_writes_enacted(due, cycle)
+            # (1) the per-cycle O(1) head check on every device; enact due
+            # writes everywhere before any device transition fires
+            for dev, wtt in nodes:
+                due = wtt.poll(cycle)
+                if due:
+                    for w in due:
+                        dev.memory.enact_xgmi_write(w, cycle)
+                    dev.on_writes_enacted(due, cycle)
             # (2) fire device transitions scheduled at this cycle
-            nxt = device.next_transition_cycle()
-            if nxt is not None and nxt <= cycle:
-                device.process_until(cycle)
-            elif nxt is None and not device.all_done and wtt.empty:
-                raise EidolaDeadlock(
-                    f"all queues empty at cycle {cycle} with "
-                    f"{device.blocked_count()} workgroups blocked "
-                    "(missing peer flag writes in the trace?)"
-                )
+            any_pending = False
+            for dev, wtt in nodes:
+                nxt = dev.next_transition_cycle()
+                if nxt is not None:
+                    any_pending = True
+                    if nxt <= cycle:
+                        dev.process_until(cycle)
+            if (
+                not any_pending
+                and all(wtt.empty for _, wtt in nodes)
+                and not all(dev.all_done for dev, _ in nodes)
+            ):
+                raise EidolaDeadlock(_deadlock_message(nodes, cycle))
         return EngineResult(
             sim_cycles=max(cycle, 0),
             wall_time_s=time.perf_counter() - t0,
-            head_polls=wtt.stats.head_polls,
+            head_polls=sum(wtt.stats.head_polls for _, wtt in nodes),
         )
 
 
 class EventQueueEngine:
-    """Event-driven engine using the WTT as a native event queue."""
+    """Event-driven engine using the WTTs as native event queues."""
 
     name = "event"
 
     def run(self, device: TargetDevice, wtt: WriteTrackingTable) -> EngineResult:
+        return self.run_nodes([(device, wtt)])
+
+    def run_nodes(self, nodes: Sequence[Node]) -> EngineResult:
         t0 = time.perf_counter()
         last_cycle = 0
         while True:
-            wtt_next = wtt.peek_wakeup_cycle()
-            dev_next = device.next_transition_cycle()
-            if wtt_next is None and dev_next is None:
-                if device.all_done:
+            # global next event time across every WTT and device queue
+            nxt = None
+            for dev, wtt in nodes:
+                for c in (wtt.peek_wakeup_cycle(), dev.next_transition_cycle()):
+                    if c is not None and (nxt is None or c < nxt):
+                        nxt = c
+            if nxt is None:
+                if all(dev.all_done for dev, _ in nodes):
                     break
-                raise EidolaDeadlock(
-                    f"all queues empty at cycle {last_cycle} with "
-                    f"{device.blocked_count()} workgroups blocked "
-                    "(missing peer flag writes in the trace?)"
-                )
-            # writes enact before device transitions at equal cycles, matching
-            # the cycle engine's intra-cycle ordering
-            if dev_next is None or (wtt_next is not None and wtt_next <= dev_next):
-                cycle, group = wtt.pop_next_group()
-                assert cycle is not None
-                for w in group:
-                    device.memory.enact_xgmi_write(w, cycle)
-                device.on_writes_enacted(group, cycle)
-                last_cycle = max(last_cycle, cycle)
-            else:
-                device.process_until(dev_next)
-                last_cycle = max(last_cycle, dev_next)
+                raise EidolaDeadlock(_deadlock_message(nodes, last_cycle))
+            # writes enact before device transitions at equal cycles, devices
+            # in id order — matching the cycle engine's intra-cycle ordering
+            for dev, wtt in nodes:
+                if wtt.peek_wakeup_cycle() == nxt:
+                    cycle, group = wtt.pop_next_group()
+                    for w in group:
+                        dev.memory.enact_xgmi_write(w, cycle)
+                    dev.on_writes_enacted(group, cycle)
+            for dev, _ in nodes:
+                c = dev.next_transition_cycle()
+                if c is not None and c <= nxt:
+                    dev.process_until(nxt)
+            last_cycle = max(last_cycle, nxt)
         return EngineResult(
             sim_cycles=last_cycle,
             wall_time_s=time.perf_counter() - t0,
-            head_polls=wtt.stats.head_polls,
+            head_polls=sum(wtt.stats.head_polls for _, wtt in nodes),
         )

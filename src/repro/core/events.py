@@ -238,12 +238,18 @@ def register_phase(name: str, *, color: str = "grey", glyph: str = "?") -> str:
 
 @dataclass(frozen=True)
 class Segment:
-    """One phase interval on one workgroup's timeline row."""
+    """One phase interval on one workgroup's timeline row.
+
+    ``device`` identifies which simulated device the workgroup ran on; it is 0
+    for single-detailed-device (open-loop) runs and meaningful in closed-loop
+    :class:`repro.core.cluster.Cluster` simulations.
+    """
 
     wg: int
     phase: str
     start_ns: float
     end_ns: float
+    device: int = 0
 
     def __post_init__(self) -> None:
         if self.phase not in PHASE_COLORS:

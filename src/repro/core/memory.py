@@ -77,6 +77,22 @@ class AddressMap:
         lo, hi = self.flag_region()
         return lo <= addr < hi
 
+    def decode_flag(self, addr: int) -> Optional[Tuple[int, int]]:
+        """Inverse of :meth:`flag_addr`: ``(src_device, slot)`` or ``None``.
+
+        Returns ``None`` for addresses outside the flag region or not aligned
+        to a flag base (diagnostics must not misattribute stray addresses).
+        """
+        lo, hi = self.flag_region()
+        if not (lo <= addr < hi):
+            return None
+        stride = 8 if self.flags_share_line else self.flag_stride
+        off = addr - self.flag_base
+        if off % stride:
+            return None
+        idx = off // stride
+        return (idx % self.n_devices, idx // self.n_devices)
+
     def line_of(self, addr: int) -> int:
         return addr & ~(LINE_BYTES - 1)
 

@@ -36,6 +36,7 @@ from .memory import AddressMap
 
 __all__ = [
     "TrafficOp",
+    "EmitOp",
     "PhaseSpec",
     "WGProgram",
     "Scenario",
@@ -97,6 +98,57 @@ def xgmi_out(n: int, bytes_each: int) -> TrafficOp:
 
 
 @dataclass(frozen=True)
+class EmitOp:
+    """An xGMI write *emitted into a peer device's WTT* when the owning phase
+    completes — the closed-loop counterpart of a pre-scheduled trace write.
+
+    In a :class:`repro.core.cluster.Cluster` simulation, a completing phase's
+    ``emits`` are routed over the fabric model (per-hop latency + egress-link
+    serialization/contention) and registered into device ``dst``'s Write
+    Tracking Table at the physically-derived arrival time.  Outside a cluster
+    (open-loop single-device runs) emits are inert.
+
+    dst            destination device id.
+    slot           flag slot: the write lands at ``amap.flag_addr(src, slot)``
+                   in the destination's symmetric heap, where ``src`` is the
+                   emitting device (flags are indexed by writer).
+    data/size      written value and width (1..8 bytes, like RegisteredWrite).
+    payload_bytes  data payload serialized on the link *ahead of* the flag; it
+                   delays the flag's arrival but is NOT accounted as traffic
+                   here (put the payload's ``xgmi_out`` in the phase's
+                   TrafficOps) — only the flag write itself is accounted.
+    data_writes    marker data writes registered into the destination WTT just
+                   before the flag (mirrors the open-loop trace bundles'
+                   ``include_data_writes`` decoration).
+    coalesce       "last": emit once per device, when the final workgroup
+                   completes this phase (requires all WGs of the device to
+                   share program structure, i.e. the same phase index);
+                   "each": emit once per workgroup.
+    addr           explicit destination address, overriding the flag-slot
+                   convention (e.g. raw data writes).
+    """
+
+    dst: int
+    slot: int = 0
+    data: int = 1
+    size: int = 8
+    payload_bytes: int = 0
+    data_writes: int = 0
+    coalesce: str = "last"
+    addr: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.dst < 0:
+            raise ValueError("EmitOp.dst must be a device id >= 0")
+        if not (1 <= self.size <= 8):
+            raise ValueError("EmitOp.size must be in [1, 8] bytes")
+        if self.slot < 0 or self.payload_bytes < 0 or self.data_writes < 0:
+            raise ValueError("EmitOp fields must be non-negative")
+        if self.coalesce not in ("last", "each"):
+            raise ValueError("EmitOp.coalesce must be 'last' or 'each'")
+
+
+@dataclass(frozen=True)
 class PhaseSpec:
     """One step of a workgroup's phase program.
 
@@ -110,6 +162,10 @@ class PhaseSpec:
       (spin-poll or SyncMon monitor/mwait).  Flag-read traffic is accounted by
       the interpreter, not by ``traffic``; ``duration_cycles`` is ignored.
 
+    ``emits`` fire at phase completion in closed-loop (cluster) simulations:
+    each :class:`EmitOp` becomes a registered write in a *peer* device's WTT,
+    which is how one device's perturbation ripples to the others.
+
     ``name`` doubles as the timeline segment label and the perturbation key;
     it must be registered via :func:`repro.core.events.register_phase`.
     """
@@ -118,6 +174,7 @@ class PhaseSpec:
     duration_cycles: int = 0
     traffic: Tuple[TrafficOp, ...] = ()
     wait_addrs: Optional[Tuple[int, ...]] = None
+    emits: Tuple[EmitOp, ...] = ()
 
     @property
     def is_wait(self) -> bool:
@@ -153,9 +210,22 @@ class Scenario(abc.ABC):
     as keyword arguments, and implement :meth:`programs` and :meth:`traces`.
     ``params`` holds whatever keyword arguments the constructor accepted, for
     reporting.
+
+    A scenario runs in one of two modes:
+
+    * **open loop** (default, ``closed_loop = False``): exactly one detailed
+      device (device 0); peers are eidolons whose writes are synthesized up
+      front by :meth:`traces` and replayed from the WTT.
+    * **closed loop** (``closed_loop = True``, set by scenarios that support
+      it): every device runs its own phase-program interpreter inside a
+      :class:`repro.core.cluster.Cluster`; flags are *emitted* by completing
+      phases (:class:`EmitOp`) instead of pre-scheduled, so perturbations on
+      one device propagate to the others.  Closed-loop scenarios override
+      :meth:`programs_for`.
     """
 
     name: str = ""
+    closed_loop: bool = False  # instances flip this when built closed-loop
 
     def __init__(self, cfg: SimConfig, amap: Optional[AddressMap] = None):
         self.cfg = cfg
@@ -174,6 +244,40 @@ class Scenario(abc.ABC):
     def traces(self) -> TraceBundle:
         """Registered peer writes the eidolons replay (including every flag
         write some program waits on — otherwise the run deadlocks)."""
+
+    # -- multi-device hooks (closed-loop scenarios override) -----------------
+
+    def programs_for(self, device: int) -> List[WGProgram]:
+        """Phase programs for one device of a multi-device simulation.
+
+        Open-loop scenarios model only device 0, for which this defers to
+        :meth:`programs`; closed-loop scenarios override this with genuinely
+        per-rank programs (whose phases carry :class:`EmitOp`\\ s).
+        """
+        if self.closed_loop:
+            raise NotImplementedError(
+                f"scenario {self.name!r} sets closed_loop but does not "
+                "implement programs_for()"
+            )
+        if device == 0:
+            return self.programs()
+        raise ValueError(
+            f"open-loop scenario {self.name!r} models only device 0 in "
+            f"detail (got device {device}); build it with closed_loop=True "
+            "if supported"
+        )
+
+    def traces_for(self, device: int) -> TraceBundle:
+        """Seed writes pre-registered into ``device``'s WTT before the run.
+
+        Open loop: device 0 gets the full eidolon bundle (:meth:`traces`),
+        peers get nothing — the degenerate case where an eidolon is just a
+        device whose program replays a bundle.  Closed loop: empty by default,
+        because flags are emitted by completing phases at run time.
+        """
+        if self.closed_loop:
+            return TraceBundle(meta={"scenario": self.name, "closed_loop": True})
+        return self.traces() if device == 0 else TraceBundle()
 
     # -- optional hooks ------------------------------------------------------
 
@@ -250,6 +354,7 @@ def simulate(
     *,
     perturb=None,
     collect_segments: bool = True,
+    devices: Optional[int] = None,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -258,11 +363,23 @@ def simulate(
     Scenario subclass, or a ready-built instance (whose own cfg is then used;
     passing a *different* cfg alongside an instance is an error).  Extra
     keyword arguments are forwarded to the scenario constructor (e.g.
-    ``flag_delays_ns=...`` for ``gemv_allreduce``).  Returns a
+    ``flag_delays_ns=...`` for ``gemv_allreduce``, or ``closed_loop=True``
+    for the scenarios that support running every device in detail).
+
+    ``devices`` overrides the total device count (``cfg.n_egpus`` becomes
+    ``devices - 1``), e.g. ``simulate("ring_allreduce", cfg, devices=8,
+    closed_loop=True)``.
+
+    Scenarios built with ``closed_loop=True`` run in a
+    :class:`repro.core.cluster.Cluster` (every device program-driven, flags
+    routed over the fabric); otherwise the single-detailed-device
+    :class:`repro.core.simulator.Eidola` replay path is used.  Both return a
     :class:`repro.core.simulator.Report`.
     """
     from .simulator import Eidola  # late import: simulator imports target
 
+    if devices is not None:
+        cfg = (cfg or SimConfig()).with_devices(devices)
     if isinstance(scenario, Scenario):
         # the instance's programs/traces were built from its cfg; running the
         # engines under another cfg would silently mix two configurations
@@ -270,11 +387,17 @@ def simulate(
             raise ValueError(
                 "scenario instance was built with a different SimConfig than "
                 "the one passed to simulate(); rebuild the scenario or drop "
-                "the cfg argument"
+                "the cfg/devices arguments"
             )
         cfg = scenario.cfg
     cfg = (cfg or SimConfig()).validate()
     sc = _resolve(scenario, cfg, params)
+    if sc.closed_loop:
+        from .cluster import Cluster  # late import: cluster imports target
+
+        return Cluster(
+            cfg, sc, perturb=perturb, collect_segments=collect_segments
+        ).run()
     return Eidola(
         cfg,
         sc.traces(),
@@ -352,7 +475,11 @@ class SweepRunner:
         points: List[SweepPoint] = []
         for combo in combos:
             assignment = dict(zip(keys, combo))
+            # "devices" is sugar for the total device count (like simulate())
+            devices = assignment.pop("devices", None)
             overrides = {k: v for k, v in assignment.items() if k in _CFG_FIELDS}
+            if devices is not None:
+                overrides["n_egpus"] = SimConfig().with_devices(devices).n_egpus
             params = {k: v for k, v in assignment.items() if k not in _CFG_FIELDS}
             for eng in self.engines:
                 cfg = self.base_cfg.with_(engine=eng, **overrides)

@@ -23,6 +23,7 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    EmitOp,
     PhaseSpec,
     Scenario,
     WGProgram,
@@ -54,6 +55,7 @@ class AllToAllScenario(Scenario):
         token_bytes: int = 512,
         skew_ns: float = 2_000.0,
         writes_per_peer: int = 8,
+        closed_loop: bool = False,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -63,6 +65,8 @@ class AllToAllScenario(Scenario):
         self.token_bytes = int(token_bytes)
         self.skew_ns = float(skew_ns)
         self.writes_per_peer = int(writes_per_peer)
+        self.closed_loop = bool(closed_loop)
+        self.hw = hw
         k = cfg.n_devices
         self.payload_bytes = self.tokens_per_device * self.token_bytes
         topo = Topology(axis_sizes=(k,), axis_names=("ep",), hw=hw, dci_axes=())
@@ -72,6 +76,7 @@ class AllToAllScenario(Scenario):
             "tokens_per_device": self.tokens_per_device,
             "token_bytes": self.token_bytes,
             "skew_ns": self.skew_ns,
+            "closed_loop": self.closed_loop,
         }
 
     # ------------------------------------------------------------------
@@ -84,14 +89,44 @@ class AllToAllScenario(Scenario):
         cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
         return share, sectors, cycles
 
-    def programs(self) -> List[WGProgram]:
+    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
+        """Dispatch -> incast barrier -> combine, for one rank.
+
+        ``rank`` waits on every peer's completion flag; with ``emit`` its own
+        dispatch phase pushes a completion flag to each peer over the fabric
+        (per-rank dispatch skew then *emerges* from dispatch compute + link
+        serialization instead of the open-loop ``skew_ns`` constant).
+        """
         cfg = self.cfg
         n_peers = cfg.n_egpus
         share, sectors, cycles = self._shares()
         peer_share = max(1, share // cfg.n_devices)
+        peer_chunk = max(1, self.payload_bytes // cfg.n_devices)
         wait_addrs = tuple(
-            self.amap.flag_addr(g) for g in range(1, cfg.n_devices)
+            self.amap.flag_addr(g) for g in range(cfg.n_devices) if g != rank
         )
+        emits = (
+            tuple(
+                EmitOp(
+                    g,
+                    slot=0,
+                    payload_bytes=peer_chunk,
+                    data_writes=self.writes_per_peer,
+                )
+                for g in range(cfg.n_devices)
+                if g != rank
+            )
+            if emit
+            else ()
+        )
+        # open loop: each WG's flag pushes are closed-form traffic; closed
+        # loop: the coalesced EmitOps account the (one-per-peer) flag writes
+        dispatch_traffic = [
+            reads(sectors, cfg.sector_bytes),
+            xgmi_out(n_peers, peer_share),
+        ]
+        if not emit:
+            dispatch_traffic.append(xgmi_out(n_peers, 8))
         out: List[WGProgram] = []
         for wg in range(cfg.workgroups):
             cu = wg % cfg.n_cus
@@ -107,11 +142,8 @@ class AllToAllScenario(Scenario):
                         PhaseSpec(
                             "a2a_dispatch",
                             cycles,
-                            traffic=(
-                                reads(sectors, cfg.sector_bytes),
-                                xgmi_out(n_peers, peer_share),
-                                xgmi_out(n_peers, 8),
-                            ),
+                            traffic=tuple(dispatch_traffic),
+                            emits=emits,
                         ),
                         # incast barrier on every peer's completion flag
                         PhaseSpec("wait_flags", wait_addrs=wait_addrs),
@@ -128,6 +160,14 @@ class AllToAllScenario(Scenario):
                 )
             )
         return out
+
+    def programs(self) -> List[WGProgram]:
+        return self._rank_programs(0, emit=False)
+
+    def programs_for(self, device: int) -> List[WGProgram]:
+        if not self.closed_loop:
+            return super().programs_for(device)
+        return self._rank_programs(device, emit=True)
 
     def traces(self) -> TraceBundle:
         cfg = self.cfg

@@ -23,6 +23,7 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    EmitOp,
     PhaseSpec,
     Scenario,
     WGProgram,
@@ -56,6 +57,7 @@ class PipelineP2PScenario(Scenario):
         bubble_factor: float = 1.25,
         writes_per_microbatch: int = 4,
         interval_ns: Optional[float] = None,
+        closed_loop: bool = False,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -65,6 +67,8 @@ class PipelineP2PScenario(Scenario):
         self.activation_bytes = int(activation_bytes)
         self.compute_scale = float(compute_scale)
         self.writes_per_microbatch = int(writes_per_microbatch)
+        self.closed_loop = bool(closed_loop)
+        self.hw = hw
         self.upstream = 1  # previous stage
         # next stage: where the p2p_send traffic is headed (trace metadata;
         # outgoing writes are aggregate counters, not per-address)
@@ -82,6 +86,7 @@ class PipelineP2PScenario(Scenario):
             "n_microbatches": self.n_microbatches,
             "activation_bytes": self.activation_bytes,
             "interval_ns": self.interval_ns,
+            "closed_loop": self.closed_loop,
         }
 
     @classmethod
@@ -100,13 +105,16 @@ class PipelineP2PScenario(Scenario):
         fwd_cycles = max(1, math.ceil(io_cycles * self.compute_scale))
         return share, sectors, io_cycles, fwd_cycles
 
-    def programs(self) -> List[WGProgram]:
-        cfg = self.cfg
+    def _check_slots(self) -> None:
         if self.n_microbatches > self.amap.flag_slots:
             raise ValueError(
                 f"{self.n_microbatches} microbatches need flag_slots >= "
                 f"{self.n_microbatches} (amap has {self.amap.flag_slots})"
             )
+
+    def programs(self) -> List[WGProgram]:
+        cfg = self.cfg
+        self._check_slots()
         share, sectors, io_cycles, fwd_cycles = self._shares()
         out: List[WGProgram] = []
         for wg in range(cfg.workgroups):
@@ -137,6 +145,84 @@ class PipelineP2PScenario(Scenario):
                         traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
                     )
                 )
+            out.append(
+                WGProgram(
+                    wg=wg,
+                    cu=cu,
+                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
+                    phases=tuple(phases),
+                )
+            )
+        return out
+
+    def programs_for(self, device: int) -> List[WGProgram]:
+        """Closed loop: device ``r`` is pipeline stage ``r`` (0 = source).
+
+        The source stage free-runs its microbatches; every other stage waits
+        for the upstream stage's per-microbatch arrival flag, runs forward
+        compute, and — except for the final stage — pushes activations plus
+        the hand-off flag downstream.  The microbatch cadence of interior
+        stages then *emerges* from stage-0 compute + link serialization
+        instead of the open-loop ``interval_ns`` constant.
+        """
+        if not self.closed_loop:
+            return super().programs_for(device)
+        cfg = self.cfg
+        self._check_slots()
+        share, sectors, io_cycles, fwd_cycles = self._shares()
+        n = cfg.n_devices
+        first = device == 0
+        last = device == n - 1
+        out: List[WGProgram] = []
+        for wg in range(cfg.workgroups):
+            cu = wg % cfg.n_cus
+            wave = wg // cfg.n_cus
+            phases: List[PhaseSpec] = []
+            for m in range(self.n_microbatches):
+                if not first:
+                    phases.append(
+                        PhaseSpec(
+                            "wait_flags",
+                            wait_addrs=(
+                                self.amap.flag_addr(device - 1, slot=m),
+                            ),
+                        )
+                    )
+                phases.append(
+                    PhaseSpec(
+                        "fwd_compute",
+                        fwd_cycles,
+                        traffic=(
+                            reads(sectors, cfg.sector_bytes),
+                            local_writes(1, share),
+                        ),
+                    )
+                )
+                if last:
+                    # final stage: write the microbatch result locally
+                    phases.append(
+                        PhaseSpec(
+                            "p2p_send",
+                            io_cycles,
+                            traffic=(local_writes(1, share),),
+                        )
+                    )
+                else:
+                    phases.append(
+                        PhaseSpec(
+                            "p2p_send",
+                            io_cycles,
+                            traffic=(xgmi_out(1, share),),
+                            emits=(
+                                EmitOp(
+                                    device + 1,
+                                    slot=m,
+                                    payload_bytes=self.activation_bytes,
+                                    data_writes=self.writes_per_microbatch,
+                                ),
+                            ),
+                        )
+                    )
             out.append(
                 WGProgram(
                     wg=wg,

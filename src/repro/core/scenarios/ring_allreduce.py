@@ -1,18 +1,25 @@
 """Chunked ring all-reduce as an Eidola scenario.
 
-Devices 0..n-1 form a unidirectional ring (0 -> 1 -> ... -> n-1 -> 0); the
-detailed device 0 receives from its upstream neighbour ``n-1`` and forwards to
-device 1.  A payload of ``payload_bytes`` is split into n chunks and
-reduce-scattered then all-gathered in the textbook 2(n-1) ring steps.  Each
-step is a *synchronization event* at the target: the upstream eidolon pushes
-its chunk (data writes into the partial region) followed by a per-step flag —
-one flag slot per ring step — and every workgroup waits on that flag before
-reducing/forwarding its share of the chunk.
+Devices 0..n-1 form a unidirectional ring (0 -> 1 -> ... -> n-1 -> 0).  A
+payload of ``payload_bytes`` is split into n chunks and reduce-scattered then
+all-gathered in the textbook 2(n-1) ring steps.  Each step is a
+*synchronization event*: the upstream neighbour pushes its chunk (data writes
+into the partial region) followed by a per-step flag — one flag slot per ring
+step — and every workgroup waits on that flag before reducing/forwarding its
+share of the chunk.
 
-The eidolon arrival schedule is synthesized from the collective cost model in
-:mod:`repro.core.topology` (ring algebra over the configured fabric), so the
-step cadence reflects link bandwidth and hop latency rather than an arbitrary
-constant; ``step_time_ns`` overrides it for controlled sweeps.
+Two modes:
+
+* **open loop** (default): only device 0 is detailed; the upstream eidolon's
+  arrival schedule is synthesized from the collective cost model in
+  :mod:`repro.core.topology` (ring algebra over the configured fabric), so the
+  step cadence reflects link bandwidth and hop latency rather than an
+  arbitrary constant; ``step_time_ns`` overrides it for controlled sweeps.
+* **closed loop** (``closed_loop=True``): every rank runs the same per-step
+  program in a :class:`repro.core.cluster.Cluster`; finishing step k *emits*
+  the step-k flag to the downstream rank (:class:`repro.core.scenario.EmitOp`
+  routed over the fabric model), so nothing is pre-scheduled and a
+  perturbation on one rank propagates around the ring.
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    EmitOp,
     PhaseSpec,
     Scenario,
     WGProgram,
@@ -55,6 +63,7 @@ class RingAllReduceScenario(Scenario):
         payload_bytes: int = 1 << 20,
         step_time_ns: Optional[float] = None,
         writes_per_step: int = 4,
+        closed_loop: bool = False,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -62,6 +71,7 @@ class RingAllReduceScenario(Scenario):
             raise ValueError("payload_bytes must be positive")
         self.payload_bytes = int(payload_bytes)
         self.writes_per_step = int(writes_per_step)
+        self.closed_loop = bool(closed_loop)
         self.hw = hw
         k = cfg.n_devices
         self.steps = 2 * (k - 1)
@@ -76,6 +86,7 @@ class RingAllReduceScenario(Scenario):
             "payload_bytes": self.payload_bytes,
             "step_time_ns": self.step_time_ns,
             "writes_per_step": self.writes_per_step,
+            "closed_loop": self.closed_loop,
         }
 
     @classmethod
@@ -95,10 +106,29 @@ class RingAllReduceScenario(Scenario):
         cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
         return share, sectors, cycles
 
-    def programs(self) -> List[WGProgram]:
+    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
+        """Per-step ring program of one rank; with ``emit`` the step-k flag is
+        pushed downstream when (the last WG of) step k completes."""
         cfg = self.cfg
+        n = cfg.n_devices
         share, sectors, cycles = self._wg_share()
-        rs_steps = cfg.n_devices - 1
+        chunk = max(1, self.payload_bytes // n)
+        rs_steps = n - 1
+        upstream = (rank - 1) % n
+        downstream = (rank + 1) % n
+
+        def flag_out(slot: int):
+            if not emit:
+                return ()
+            return (
+                EmitOp(
+                    downstream,
+                    slot=slot,
+                    payload_bytes=chunk,
+                    data_writes=self.writes_per_step,
+                ),
+            )
+
         out: List[WGProgram] = []
         for wg in range(cfg.workgroups):
             cu = wg % cfg.n_cus
@@ -109,13 +139,14 @@ class RingAllReduceScenario(Scenario):
                     "ring_send",
                     cycles,
                     traffic=(reads(sectors, cfg.sector_bytes), xgmi_out(1, share)),
+                    emits=flag_out(0),
                 )
             ]
             for s in range(self.steps):
                 phases.append(
                     PhaseSpec(
                         "wait_flags",
-                        wait_addrs=(self.amap.flag_addr(self.upstream, slot=s),),
+                        wait_addrs=(self.amap.flag_addr(upstream, slot=s),),
                     )
                 )
                 reducing = s < rs_steps
@@ -132,6 +163,7 @@ class RingAllReduceScenario(Scenario):
                         "ring_reduce" if reducing else "ring_gather",
                         cycles,
                         traffic=tuple(traffic),
+                        emits=() if last else flag_out(s + 1),
                     )
                 )
             out.append(
@@ -143,6 +175,14 @@ class RingAllReduceScenario(Scenario):
                 )
             )
         return out
+
+    def programs(self) -> List[WGProgram]:
+        return self._rank_programs(0, emit=False)
+
+    def programs_for(self, device: int) -> List[WGProgram]:
+        if not self.closed_loop:
+            return super().programs_for(device)
+        return self._rank_programs(device, emit=True)
 
     def traces(self) -> TraceBundle:
         cfg = self.cfg

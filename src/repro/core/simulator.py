@@ -41,15 +41,34 @@ class Report:
     monitor_stats: Dict[str, int] = field(default_factory=dict)
     segments: List[Segment] = field(default_factory=list)
     meta: Dict[str, object] = field(default_factory=dict)
+    # multi-device (closed-loop cluster) breakdown; open-loop runs keep the
+    # defaults (one detailed device, aggregate == device 0)
+    n_devices: int = 1
+    per_device: Dict[int, Dict[str, int]] = field(default_factory=dict)
+    closed_loop: bool = False
 
     def summary(self) -> str:
+        mode = f"|{self.n_devices}dev closed" if self.closed_loop else ""
         return (
-            f"[{self.scenario}|{self.engine}/{self.sync}] "
+            f"[{self.scenario}|{self.engine}/{self.sync}{mode}] "
             f"flag_reads={self.flag_reads} "
             f"nonflag_reads={self.nonflag_reads} "
             f"kernel={self.kernel_span_ns:.0f}ns "
             f"wall={self.wall_time_s * 1e3:.1f}ms"
         )
+
+    def device_summary(self) -> str:
+        """One line per device: flag/non-flag reads and xGMI in/out."""
+        lines = []
+        for d in sorted(self.per_device):
+            t = self.per_device[d]
+            lines.append(
+                f"  device {d}: flag_reads={t.get('flag_reads', 0)} "
+                f"nonflag_reads={t.get('nonflag_reads', 0)} "
+                f"xgmi_in={t.get('xgmi_writes_in', 0)} "
+                f"xgmi_out={t.get('xgmi_writes_out', 0)}"
+            )
+        return "\n".join(lines)
 
 
 class Eidola:
@@ -153,6 +172,9 @@ class Eidola:
             monitor_stats=dict(monitor.stats) if monitor else {},
             segments=device.collect_segments() if self.collect_segments else [],
             meta=dict(self.traces.meta),
+            n_devices=1,
+            per_device={0: memory.traffic.as_dict()},
+            closed_loop=False,
         )
 
 

@@ -29,9 +29,10 @@ same transitions and therefore produce bit-identical traffic and timelines.
 
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .config import SimConfig, SyncPolicy
 from .events import RegisteredWrite, Segment
@@ -71,11 +72,19 @@ class _WG:
 
 
 class TargetDevice:
-    """The single detailed device (device 0) of an Eidola simulation.
+    """One detailed device of an Eidola simulation.
 
-    ``scenario`` provides the phase programs; for back-compat a
-    :class:`repro.core.workload.GemvAllReduceWorkload` is also accepted and
-    wrapped in the registered ``gemv_allreduce`` scenario.
+    In the classic open-loop configuration this is the single device 0; in a
+    closed-loop :class:`repro.core.cluster.Cluster` every device is one of
+    these, each with its own ``device_id``, :class:`DirectoryMemory`,
+    :class:`MonitorLog`, and Write Tracking Table.  ``emit_sink`` (set by the
+    cluster) receives phase-completion :class:`repro.core.scenario.EmitOp`
+    notifications; without a sink, emits are inert (open-loop degenerate
+    case).
+
+    ``scenario`` provides the phase programs via ``programs_for(device_id)``;
+    for back-compat a :class:`repro.core.workload.GemvAllReduceWorkload` is
+    also accepted and wrapped in the registered ``gemv_allreduce`` scenario.
     """
 
     def __init__(
@@ -85,6 +94,9 @@ class TargetDevice:
         memory: DirectoryMemory,
         monitor_log: Optional[MonitorLog] = None,
         perturb=None,
+        *,
+        device_id: int = 0,
+        emit_sink: Optional[Callable[[int, int, int, "PhaseSpec", int], None]] = None,
     ):
         if not isinstance(scenario, Scenario):
             from .scenarios.gemv_allreduce import GemvAllReduceScenario
@@ -98,8 +110,10 @@ class TargetDevice:
         if cfg.sync == SyncPolicy.SYNCMON and monitor_log is None:
             raise ValueError("SYNCMON policy requires a MonitorLog")
         self.perturb = perturb
+        self.device_id = int(device_id)
+        self.emit_sink = emit_sink
 
-        programs = sorted(scenario.programs(), key=lambda p: p.wg)
+        programs = sorted(scenario.programs_for(self.device_id), key=lambda p: p.wg)
         if [p.wg for p in programs] != list(range(len(programs))):
             raise ValueError("WGProgram ids must be contiguous from 0")
         self.wgs = [_WG(program=p) for p in programs]
@@ -126,8 +140,6 @@ class TargetDevice:
     # ------------------------------------------------------------------
 
     def _push(self, cycle: int, wg_id: int) -> None:
-        import heapq
-
         heapq.heappush(self._ready, (int(cycle), wg_id))
 
     def next_transition_cycle(self) -> Optional[int]:
@@ -135,8 +147,6 @@ class TargetDevice:
 
     def process_until(self, cycle: int) -> None:
         """Fire all transitions scheduled at or before ``cycle``."""
-        import heapq
-
         while self._ready and self._ready[0][0] <= cycle:
             t, wg_id = heapq.heappop(self._ready)
             self._advance(self.wgs[wg_id], t)
@@ -147,6 +157,18 @@ class TargetDevice:
 
     def blocked_count(self) -> int:
         return sum(1 for w in self.wgs if w.in_wait and w.blocked_on is not None)
+
+    def blocked_waits(self) -> Dict[int, List[int]]:
+        """Unsatisfied flag address -> sorted blocked workgroup ids.
+
+        Deadlock diagnostics: these are the flags no pending write will ever
+        set (decode them with ``self.amap.decode_flag``).
+        """
+        out: Dict[int, List[int]] = {}
+        for w in self.wgs:
+            if w.in_wait and w.blocked_on is not None:
+                out.setdefault(w.blocked_on, []).append(w.program.wg)
+        return {addr: sorted(wgs) for addr, wgs in out.items()}
 
     # ------------------------------------------------------------------
     # phase durations (perturbable)
@@ -173,10 +195,13 @@ class TargetDevice:
                     phase=spec.name,
                     start_ns=ns(start),
                     end_ns=ns(end),
+                    device=self.device_id,
                 )
             )
         for op in spec.traffic:
             op.apply(self.memory)
+        if spec.emits and self.emit_sink is not None:
+            self.emit_sink(self.device_id, wg.program.wg, wg.phase_idx, spec, end)
 
     # ------------------------------------------------------------------
     # the program interpreter
@@ -377,6 +402,7 @@ class TargetDevice:
                             phase="descheduled",
                             start_ns=ns(st),
                             end_ns=ns(en),
+                            device=self.device_id,
                         )
                     )
         return sorted(segs, key=lambda s: (s.wg, s.start_ns))

@@ -18,9 +18,16 @@ __all__ = ["to_chrome_trace", "to_csv", "ascii_timeline", "phase_totals"]
 def to_chrome_trace(
     segments: Sequence[Segment], *, device: int = 0, label: str = "GPU"
 ) -> str:
-    """Chrome trace-event JSON; one tid per workgroup row, like the figures."""
+    """Chrome trace-event JSON; one tid per workgroup row, like the figures.
+
+    Closed-loop (multi-device) segment lists map each simulated device to its
+    own Chrome-trace process; ``device`` offsets the pid numbering.
+    """
     events = []
+    pids = set()
     for s in segments:
+        pid = device + s.device
+        pids.add(pid)
         events.append(
             {
                 "name": s.phase,
@@ -28,7 +35,7 @@ def to_chrome_trace(
                 "ph": "X",
                 "ts": s.start_ns / 1000.0,  # chrome traces are in us
                 "dur": max(s.dur_ns, 1e-3) / 1000.0,
-                "pid": device,
+                "pid": pid,
                 "tid": s.wg,
                 "args": {"phase": s.phase},
             }
@@ -37,17 +44,24 @@ def to_chrome_trace(
         {
             "name": "process_name",
             "ph": "M",
-            "pid": device,
-            "args": {"name": f"{label}{device}"},
+            "pid": pid,
+            "args": {"name": f"{label}{pid}"},
         }
+        for pid in sorted(pids or {device})
     ]
     return json.dumps({"traceEvents": meta + events})
 
 
 def to_csv(segments: Sequence[Segment]) -> str:
-    lines = ["wg,phase,start_ns,end_ns"]
+    """CSV export; a ``device`` column is appended only for multi-device
+    segment lists, keeping the single-device header stable."""
+    multi = any(s.device for s in segments)
+    lines = ["wg,phase,start_ns,end_ns" + (",device" if multi else "")]
     for s in segments:
-        lines.append(f"{s.wg},{s.phase},{s.start_ns:.3f},{s.end_ns:.3f}")
+        row = f"{s.wg},{s.phase},{s.start_ns:.3f},{s.end_ns:.3f}"
+        if multi:
+            row += f",{s.device}"
+        lines.append(row)
     return "\n".join(lines)
 
 
@@ -67,20 +81,22 @@ def ascii_timeline(
         return "(no segments)"
     t_end = max(s.end_ns for s in segments)
     t_end = max(t_end, 1e-9)
-    by_wg: Dict[int, List[Segment]] = {}
+    multi = any(s.device for s in segments)
+    by_row: Dict[tuple, List[Segment]] = {}
     for s in segments:
-        by_wg.setdefault(s.wg, []).append(s)
-    wgs = sorted(by_wg)
-    stride = row_stride or max(1, len(wgs) // max_rows)
+        by_row.setdefault((s.device, s.wg), []).append(s)
+    keys = sorted(by_row)
+    stride = row_stride or max(1, len(keys) // max_rows)
     rows = []
-    for wg in wgs[::stride][:max_rows]:
+    for dev, wg in keys[::stride][:max_rows]:
         row = [" "] * width
-        for s in sorted(by_wg[wg], key=lambda x: x.start_ns):
+        for s in sorted(by_row[(dev, wg)], key=lambda x: x.start_ns):
             a = int(s.start_ns / t_end * (width - 1))
             b = int(s.end_ns / t_end * (width - 1))
             for i in range(a, max(a, b) + 1):
                 row[i] = _GLYPH.get(s.phase, "?")
-        rows.append(f"wg{wg:4d} |" + "".join(row) + "|")
+        tag = f"d{dev} wg{wg:4d}" if multi else f"wg{wg:4d}"
+        rows.append(f"{tag} |" + "".join(row) + "|")
     header = f"t=0 {'-' * (width - 14)} t={t_end / 1000.0:.2f}us"
     return "\n".join([header] + rows)
 

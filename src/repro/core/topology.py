@@ -17,7 +17,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
-__all__ = ["HardwareSpec", "Topology", "CollectiveCost", "V5E"]
+__all__ = ["HardwareSpec", "Topology", "CollectiveCost", "FabricModel", "V5E"]
 
 CollectiveKind = Literal[
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"
@@ -140,3 +140,84 @@ class Topology:
             for n, s in zip(self.axis_names, self.axis_sizes)
         )
         return f"<Topology {self.n_chips} chips: {axes}; {self.hw.name}>"
+
+
+class FabricModel:
+    """Per-message routing over a bidirectional ring fabric, with contention.
+
+    This is the closed-loop counterpart of :meth:`Topology.collective`: instead
+    of pricing a whole collective in closed form, it prices *one xGMI write
+    burst* from ``src`` to ``dst`` at a concrete issue time, so the
+    :class:`repro.core.cluster.Cluster` can register the write into the
+    destination device's WTT at a physically-derived arrival time.
+
+    The model is deliberately simple (the paper models the fabric only through
+    per-write wakeup times):
+
+    * shortest-path hop count on the ring x ``hop_latency_ns`` of pure latency;
+    * store-and-forward serialization of the burst on the *egress port*
+      (``bytes / link_bw``), with one port per (device, ring direction);
+    * contention: each egress port is busy until its previous burst finished
+      serializing, so back-to-back emissions queue up (FIFO per port).
+
+    All state updates are deterministic in emission order, which both engines
+    reproduce identically (writes before transitions, devices in id order), so
+    cycle/event runs stay bit-identical.
+    """
+
+    def __init__(
+        self,
+        n_devices: int,
+        hw: HardwareSpec = V5E,
+        *,
+        hop_latency_ns: Optional[float] = None,
+        link_bw_bytes_per_ns: Optional[float] = None,
+    ):
+        if n_devices < 2:
+            raise ValueError("a fabric needs at least 2 devices")
+        self.n_devices = int(n_devices)
+        self.hw = hw
+        self.hop_latency_ns = (
+            float(hop_latency_ns)
+            if hop_latency_ns is not None
+            else hw.ici_hop_latency_s * 1e9
+        )
+        self.link_bw_bytes_per_ns = (
+            float(link_bw_bytes_per_ns)
+            if link_bw_bytes_per_ns is not None
+            else hw.ici_link_bw * self.hw.ici_links_per_axis / 1e9
+        )
+        if self.hop_latency_ns < 0 or self.link_bw_bytes_per_ns <= 0:
+            raise ValueError("hop latency must be >= 0 and link bandwidth > 0")
+        # (device, direction) -> ns at which the egress port frees up
+        self._busy_until_ns: Dict[Tuple[int, int], float] = {}
+        self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
+
+    def reset(self) -> None:
+        self._busy_until_ns.clear()
+        self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
+
+    def route(self, src: int, dst: int) -> Tuple[int, int]:
+        """(hops, direction) of the shortest ring path; +1 = ascending ids."""
+        n = self.n_devices
+        if src == dst or not (0 <= src < n and 0 <= dst < n):
+            raise ValueError(f"bad route {src} -> {dst} on {n}-device ring")
+        fwd = (dst - src) % n
+        bwd = (src - dst) % n
+        return (fwd, +1) if fwd <= bwd else (bwd, -1)
+
+    def transfer(self, src: int, dst: int, nbytes: int, issue_ns: float) -> float:
+        """Arrival time (ns) of an ``nbytes`` burst issued at ``issue_ns``.
+
+        Mutates the egress-port busy state (contention) and returns when the
+        burst becomes *deliverable* at the destination directory.
+        """
+        hops, direction = self.route(src, dst)
+        port = (src, direction)
+        start = max(issue_ns, self._busy_until_ns.get(port, 0.0))
+        ser_ns = max(0, nbytes) / self.link_bw_bytes_per_ns
+        self._busy_until_ns[port] = start + ser_ns
+        self.stats["messages"] += 1
+        self.stats["bytes"] += max(0, nbytes)
+        self.stats["queued_ns"] += start - issue_ns
+        return start + ser_ns + hops * self.hop_latency_ns

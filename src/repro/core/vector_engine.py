@@ -255,6 +255,9 @@ def run_vectorized(sim) -> "Report":  # noqa: F821 - avoids circular import
         monitor_stats=monitor_stats if cfg.sync == SyncPolicy.SYNCMON else {},
         segments=segments,
         meta=dict(sim.traces.meta),
+        n_devices=1,
+        per_device={0: dict(traffic)},
+        closed_loop=False,
     )
 
 

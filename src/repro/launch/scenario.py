@@ -8,12 +8,20 @@ Usage:
       -p flag_delays_ns=20000 --engines cycle,event
   PYTHONPATH=src python -m repro.launch.scenario --scenario all_to_all \
       --sweep skew_ns=0,2000,8000 --sweep n_egpus=3,7 --csv /tmp/sweep.csv
+  PYTHONPATH=src python -m repro.launch.scenario --scenario ring_allreduce \
+      --devices 8 --detailed all
 
 ``-p/--param key=value`` sets a scenario constructor parameter or a SimConfig
 field for a single run; ``--sweep key=v1,v2,...`` builds a grid handled by
 :class:`repro.core.scenario.SweepRunner` (config fields and scenario params
 are told apart automatically).  Values are parsed as Python literals when
 possible, else kept as strings.
+
+``--devices N`` sets the total device count; ``--detailed all`` promotes every
+device to a program-driven detailed device in one closed simulation loop
+(``closed_loop=True`` — flags are emitted over the fabric instead of
+pre-scheduled), while the default ``--detailed 0`` keeps the open-loop
+single-detailed-device replay.
 """
 
 from __future__ import annotations
@@ -89,6 +97,11 @@ def main(argv=None) -> int:
                     help="comma-separated engine list (sweeps run each)")
     ap.add_argument("--sync", default="spin",
                     choices=[s.value for s in SyncPolicy])
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="total device count (sets n_egpus = N - 1)")
+    ap.add_argument("--detailed", default="0", choices=["0", "all"],
+                    help="'all': closed-loop cluster, every device detailed; "
+                         "'0': open-loop replay with one detailed device")
     ap.add_argument("-p", "--param", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="scenario parameter or SimConfig override")
@@ -118,7 +131,14 @@ def main(argv=None) -> int:
     params = _parse_kv(args.param)
     cfg_over = {k: v for k, v in params.items() if k in _CFG_FIELDS}
     sc_params = {k: v for k, v in params.items() if k not in _CFG_FIELDS}
-    base_cfg = SimConfig(sync=SyncPolicy(args.sync), **cfg_over)
+    if args.detailed == "all":
+        sc_params["closed_loop"] = True
+    try:
+        base_cfg = SimConfig(sync=SyncPolicy(args.sync), **cfg_over)
+        if args.devices is not None:
+            base_cfg = base_cfg.with_devices(args.devices)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
 
     if args.sweep:
         grid = _parse_kv(args.sweep, split_values=True)
@@ -146,6 +166,8 @@ def main(argv=None) -> int:
         except (NotImplementedError, TypeError, ValueError) as e:
             raise SystemExit(f"error: {e}")
         print(report.summary())
+        if report.closed_loop:
+            print(report.device_summary())
     return 0
 
 

@@ -61,6 +61,25 @@ def test_scenario_cli_lists_and_runs():
     assert len(counts) == 1
 
 
+def test_scenario_cli_closed_loop_devices():
+    out = _run([
+        "repro.launch.scenario", "--scenario", "ring_allreduce",
+        "--devices", "4", "--detailed", "all", "--engines", "cycle,event",
+        "-p", "workgroups=12",
+    ])
+    lines = [l for l in out.strip().splitlines() if l.startswith("[")]
+    assert len(lines) == 2
+    assert all("4dev closed" in l for l in lines)
+    # per-device breakdown printed for each engine, identical counts
+    assert out.count("device 0:") == 2
+    counts = {
+        (l.split("flag_reads=")[1].split()[0],
+         l.split("nonflag_reads=")[1].split()[0])
+        for l in lines
+    }
+    assert len(counts) == 1
+
+
 def test_scenario_cli_sweep_csv(tmp_path):
     csv_path = str(tmp_path / "sweep.csv")
     out = _run([

@@ -1,0 +1,336 @@
+"""Closed-loop multi-device simulation tests: cycle/event bit-identity at
+--devices 4 for every registered scenario, open-loop replay equivalence at
+zero perturbation, cross-device perturbation propagation, fabric routing and
+contention, actionable deadlock diagnostics, and the per-device Report
+breakdown."""
+
+import pytest
+
+from repro.core import (
+    Cluster,
+    Eidola,
+    EidolaDeadlock,
+    EmitOp,
+    EngineKind,
+    FabricModel,
+    SimConfig,
+    SyncPolicy,
+    TraceBundle,
+    get_scenario,
+    list_scenarios,
+    simulate,
+)
+from repro.core.scenarios.ring_allreduce import RingAllReduceScenario
+
+FAST = SimConfig(workgroups=12, n_cus=4)
+
+CLOSED_LOOP = ("ring_allreduce", "all_to_all", "pipeline_p2p")
+
+
+def _segments_key(report):
+    return sorted(
+        (s.device, s.wg, s.phase, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in report.segments
+    )
+
+
+def _wait_ends(report, device):
+    return [
+        s.end_ns
+        for s in report.segments
+        if s.device == device and s.phase == "wait_flags"
+    ]
+
+
+# ---------------------------------------------------------------------------
+# engine bit-identity in the closed loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(set(list_scenarios())))
+@pytest.mark.parametrize("sync", [SyncPolicy.SPIN, SyncPolicy.SYNCMON])
+def test_cycle_event_bit_identical_at_4_devices(name, sync):
+    """Every registered scenario at --devices 4: closed loop where supported,
+    open loop otherwise — cycle and event engines must agree bit-for-bit."""
+    params = {"closed_loop": True} if name in CLOSED_LOOP else {}
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(sync=sync, engine=eng)
+        reports[eng] = simulate(name, cfg, devices=4, **params)
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.traffic == b.traffic
+    assert a.per_device == b.per_device
+    assert a.kernel_span_ns == pytest.approx(b.kernel_span_ns)
+    assert _segments_key(a) == _segments_key(b)
+    assert a.monitor_stats == b.monitor_stats
+
+
+def test_ring_8_devices_closed_loop_both_engines():
+    """The acceptance case: devices=8 closed loop, identical traffic and
+    timelines under both engines."""
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(engine=eng)
+        reports[eng] = simulate(
+            "ring_allreduce", cfg, devices=8, closed_loop=True
+        )
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.n_devices == b.n_devices == 8
+    assert a.closed_loop and b.closed_loop
+    assert a.traffic == b.traffic
+    assert _segments_key(a) == _segments_key(b)
+    # every rank of a symmetric ring sees identical traffic
+    assert len(a.per_device) == 8
+    assert len({tuple(sorted(t.items())) for t in a.per_device.values()}) == 1
+
+
+def test_open_loop_gemv_preserved_alongside_clusters():
+    """The degenerate case: open-loop gemv_allreduce still reproduces the
+    paper's exact non-flag read count with the cluster machinery in place."""
+    r = simulate(
+        "gemv_allreduce",
+        SimConfig(engine=EngineKind.EVENT),
+        flag_delays_ns=10_000.0,
+        collect_segments=False,
+    )
+    assert r.nonflag_reads == 65_792
+    assert not r.closed_loop and r.n_devices == 1
+    assert r.per_device[0]["nonflag_reads"] == 65_792
+
+
+def test_gemv_has_no_closed_loop_mode():
+    with pytest.raises(TypeError):
+        simulate("gemv_allreduce", FAST, closed_loop=True)
+
+
+# ---------------------------------------------------------------------------
+# zero perturbation: closed loop == open-loop replay of the emergent schedule
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_ring_matches_open_loop_replay_of_its_schedule():
+    """Freeze the closed loop's emergent flag schedule into a trace bundle;
+    open-loop replay of that bundle must reproduce device 0's reads and wait
+    timeline exactly (the eidolon is just a device whose program replays a
+    bundle)."""
+    cfg = FAST.with_(engine=EngineKind.EVENT, include_data_writes=False)
+    sc = RingAllReduceScenario(cfg, closed_loop=True)
+    cluster = Cluster(cfg, sc)
+    closed = cluster.run()
+    arrivals = cluster.nodes[0].target.flag_set_cycle
+    assert len(arrivals) == sc.steps
+
+    bundle = TraceBundle(meta={"scenario": "ring_allreduce"})
+    for addr, cyc in sorted(arrivals.items(), key=lambda kv: kv[1]):
+        bundle.add(
+            wakeup_ns=cfg.cycles_to_ns(cyc) - cfg.xgmi_enact_latency_ns,
+            addr=addr,
+            data=1,
+            size=8,
+            src=cfg.n_devices - 1,
+        )
+    open_sc = RingAllReduceScenario(cfg)
+    replay = Eidola(cfg, bundle, scenario=open_sc).run()
+
+    c0, o0 = closed.per_device[0], replay.per_device[0]
+    assert c0["flag_reads"] == o0["flag_reads"]
+    assert c0["nonflag_reads"] == o0["nonflag_reads"]
+    closed_waits = sorted(
+        (s.wg, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in closed.segments
+        if s.device == 0 and s.phase == "wait_flags"
+    )
+    replay_waits = sorted(
+        (s.wg, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in replay.segments
+        if s.phase == "wait_flags"
+    )
+    assert closed_waits == replay_waits
+
+
+# ---------------------------------------------------------------------------
+# perturbation propagation (the point of the closed loop)
+# ---------------------------------------------------------------------------
+
+
+class _SlowReduce:
+    """Deterministically stretch one rank's ring_reduce phases."""
+
+    def __init__(self, factor=16):
+        self.factor = factor
+
+    def scale_phase(self, wg, name, base_cycles):
+        return base_cycles * self.factor if name == "ring_reduce" else base_cycles
+
+    def jitter_write(self, w):
+        return w
+
+
+def test_perturbing_one_rank_shifts_downstream_wait_segments():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    base = simulate("ring_allreduce", cfg, devices=4, closed_loop=True)
+    pert = simulate(
+        "ring_allreduce",
+        cfg,
+        devices=4,
+        closed_loop=True,
+        perturb={1: _SlowReduce()},
+    )
+    # flags now arrive later downstream: every other rank's wait segments
+    # shift to later wall-clock times, and the whole kernel stretches
+    for dev in (2, 3, 0):
+        assert sum(_wait_ends(pert, dev)) > sum(_wait_ends(base, dev)), dev
+    assert pert.kernel_span_ns > base.kernel_span_ns
+    # rank 2 is directly downstream of the slow rank: its *last* reduce input
+    # is strictly delayed
+    assert max(_wait_ends(pert, 2)) > max(_wait_ends(base, 2))
+
+
+def test_propagation_identical_across_engines():
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(engine=eng)
+        reports[eng] = simulate(
+            "ring_allreduce",
+            cfg,
+            devices=4,
+            closed_loop=True,
+            perturb={1: _SlowReduce()},
+        )
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.traffic == b.traffic
+    assert _segments_key(a) == _segments_key(b)
+
+
+def test_write_jitter_deterministic_across_engines():
+    """Gaussian jitter on emitted writes is keyed by (src, seq); the global
+    emission order is engine-invariant, so jittered closed-loop runs must
+    still match bit-for-bit."""
+    from repro.core import GaussianPerturb
+
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(engine=eng)
+        reports[eng] = simulate(
+            "ring_allreduce",
+            cfg,
+            devices=4,
+            closed_loop=True,
+            perturb=GaussianPerturb(seed=7, phase_sigma=0.1,
+                                    write_sigma_ns=300.0),
+        )
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.traffic == b.traffic
+    assert _segments_key(a) == _segments_key(b)
+
+
+# ---------------------------------------------------------------------------
+# fabric model
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_ring_routing():
+    f = FabricModel(6, hop_latency_ns=100.0, link_bw_bytes_per_ns=1.0)
+    assert f.route(0, 1) == (1, +1)
+    assert f.route(0, 5) == (1, -1)
+    assert f.route(1, 4) == (3, +1)  # tie broken toward ascending ids
+    with pytest.raises(ValueError):
+        f.route(0, 0)
+    with pytest.raises(ValueError):
+        f.route(0, 6)
+
+
+def test_fabric_serialization_and_contention():
+    f = FabricModel(4, hop_latency_ns=100.0, link_bw_bytes_per_ns=2.0)
+    # 200 bytes at 2 B/ns = 100 ns serialization + 1 hop latency
+    assert f.transfer(0, 1, 200, issue_ns=0.0) == pytest.approx(200.0)
+    # same egress port still busy until 100ns: second burst queues behind it
+    assert f.transfer(0, 1, 200, issue_ns=0.0) == pytest.approx(300.0)
+    # opposite direction uses the other port: no queueing
+    assert f.transfer(0, 3, 200, issue_ns=0.0) == pytest.approx(200.0)
+    assert f.stats["messages"] == 3
+    assert f.stats["queued_ns"] == pytest.approx(100.0)
+
+
+def test_emitop_validation():
+    with pytest.raises(ValueError):
+        EmitOp(dst=-1)
+    with pytest.raises(ValueError):
+        EmitOp(dst=0, size=16)
+    with pytest.raises(ValueError):
+        EmitOp(dst=0, coalesce="sometimes")
+
+
+def test_address_map_decode_flag_round_trip():
+    from repro.core import AddressMap
+
+    amap = AddressMap(n_devices=4, flag_slots=6)
+    for d in range(4):
+        for s in range(6):
+            assert amap.decode_flag(amap.flag_addr(d, slot=s)) == (d, s)
+    assert amap.decode_flag(amap.data_base) is None
+    assert amap.decode_flag(amap.flag_addr(1) + 4) is None  # misaligned
+
+
+# ---------------------------------------------------------------------------
+# actionable deadlock diagnostics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eng", [EngineKind.CYCLE, EngineKind.EVENT])
+def test_deadlock_message_names_scenario_wgs_and_flags(eng):
+    cfg = FAST.with_(engine=eng)
+    sc = RingAllReduceScenario(cfg)
+    with pytest.raises(EidolaDeadlock) as ei:
+        Eidola(cfg, TraceBundle(), scenario=sc).run()  # no flag writes at all
+    msg = str(ei.value)
+    assert "'ring_allreduce'" in msg
+    assert "device 0" in msg
+    assert "wg 0-11" in msg  # all 12 workgroups, range-compressed
+    expected_addr = sc.amap.flag_addr(cfg.n_devices - 1, slot=0)
+    assert f"0x{expected_addr:x}" in msg
+    assert f"src_device={cfg.n_devices - 1}" in msg
+    assert "slot=0" in msg
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_per_device_breakdown_sums_to_aggregate():
+    r = simulate(
+        "all_to_all",
+        FAST.with_(engine=EngineKind.EVENT),
+        devices=4,
+        closed_loop=True,
+        collect_segments=False,
+    )
+    assert set(r.per_device) == {0, 1, 2, 3}
+    for key, total in r.traffic.items():
+        assert total == sum(t[key] for t in r.per_device.values()), key
+    assert r.device_summary().count("device") == 4
+
+
+def test_emitted_writes_register_in_destination_wtts():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
+    cluster = Cluster(cfg, sc)
+    cluster.run()
+    steps = sc.steps
+    per_flag = 1 + sc.writes_per_step  # flag + marker data writes
+    for node in cluster.nodes:
+        assert node.wtt.stats.registered == steps * per_flag
+        assert node.wtt.stats.enacted == steps * per_flag
+        assert node.wtt.empty
+
+
+def test_sweep_runner_devices_axis():
+    from repro.core import SweepRunner
+
+    runner = SweepRunner("ring_allreduce", FAST, engines=(EngineKind.EVENT,))
+    points = runner.run(devices=[2, 4], closed_loop=[True])
+    assert len(points) == 2
+    assert [p.overrides["n_egpus"] for p in points] == [1, 3]
+    spans = [p.report.kernel_span_ns for p in points]
+    assert spans[1] > spans[0]  # more ring steps -> longer kernel
