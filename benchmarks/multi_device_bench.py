@@ -6,8 +6,17 @@ future performance PRs have a multi-device baseline to compare against
 (`BENCH_multi_device.json`).  A cross-engine spot check at the smallest
 device count guards the cycle/event bit-identity on every benchmark run.
 
+``--check BASELINE.json`` turns the run into a regression guard: for every
+row that also exists in the baseline (same scenario/devices/engine/sync/
+workgroups) the traffic counters must match bit-for-bit and wall time must
+not regress beyond ``--wall-factor`` (default 2x) — counters drifting means
+the simulation physics changed, wall regressing means someone broke the
+cohort interpreter or the event calendar.
+
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
-     [--quick] [--out BENCH_multi_device.json]
+     [--quick] [--devices 4,8,...] [--repeats N]
+     [--check BENCH_multi_device.json] [--wall-factor 2.0]
+     [--out BENCH_multi_device.json]
 """
 
 from __future__ import annotations
@@ -20,6 +29,65 @@ import sys
 
 CLOSED_LOOP_SCENARIOS = ("ring_allreduce", "all_to_all", "pipeline_p2p")
 
+# the simulation-physics outputs that must never drift between runs
+COUNTER_KEYS = (
+    "flag_reads",
+    "nonflag_reads",
+    "xgmi_writes_in",
+    "wtt_enacted",
+    "sim_cycles",
+    "kernel_span_ns",
+)
+
+
+def _row_key(row: dict) -> tuple:
+    return (
+        row["scenario"],
+        row["devices"],
+        row["engine"],
+        row["sync"],
+        row["workgroups"],
+    )
+
+
+def check_against_baseline(
+    rows, baseline_path: str, wall_factor: float, wall_grace_s: float = 0.05
+) -> list:
+    """Return a list of human-readable failures ([] = guard passes).
+
+    Counters are compared exactly.  Wall time fails only beyond
+    ``factor * baseline + grace``: the absolute grace keeps few-millisecond
+    rows from tripping on scheduler noise while still catching real
+    complexity regressions (which cost tens of ms even at 4 devices).
+    """
+    with open(baseline_path) as f:
+        baseline = {_row_key(r): r for r in json.load(f)["rows"]}
+    failures = []
+    matched = 0
+    for row in rows:
+        base = baseline.get(_row_key(row))
+        if base is None:
+            continue
+        matched += 1
+        for k in COUNTER_KEYS:
+            if row[k] != base[k]:
+                failures.append(
+                    f"{row['scenario']} devices={row['devices']}: {k} drifted "
+                    f"{base[k]} -> {row[k]}"
+                )
+        if row["wall_time_s"] > wall_factor * base["wall_time_s"] + wall_grace_s:
+            failures.append(
+                f"{row['scenario']} devices={row['devices']}: wall time "
+                f"regressed {base['wall_time_s'] * 1e3:.1f} ms -> "
+                f"{row['wall_time_s'] * 1e3:.1f} ms (> {wall_factor:g}x)"
+            )
+    if not matched:
+        failures.append(
+            f"no rows matched the baseline {baseline_path} — check devices/"
+            "workgroups flags"
+        )
+    return failures
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -27,7 +95,18 @@ def main() -> None:
                     help="tiny config + small device counts (CI smoke)")
     ap.add_argument("--out", default="BENCH_multi_device.json")
     ap.add_argument("--devices", default=None,
-                    help="comma-separated device counts (default 4,8,16,32)")
+                    help="comma-separated device counts "
+                         "(default 4,8,16,32,64,128,256)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="wall time = min over N runs (counters must agree)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="regression guard: compare counters (exact) and "
+                         "wall time against this baseline JSON")
+    ap.add_argument("--wall-factor", type=float, default=2.0,
+                    help="max tolerated wall-time ratio vs baseline")
+    ap.add_argument("--wall-grace", type=float, default=0.05,
+                    help="absolute wall-time slack in seconds (scheduler "
+                         "noise floor for few-ms rows)")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -36,7 +115,7 @@ def main() -> None:
     if args.devices:
         device_counts = [int(x) for x in args.devices.split(",")]
     else:
-        device_counts = [2, 4] if args.quick else [4, 8, 16, 32]
+        device_counts = [2, 4] if args.quick else [4, 8, 16, 32, 64, 128, 256]
     base = SimConfig(
         workgroups=16 if args.quick else 64,
         engine=EngineKind.EVENT,
@@ -47,25 +126,35 @@ def main() -> None:
           f"{'flag_reads':>11s} {'wtt_enacted':>11s} {'wall_ms':>9s}")
     for name in CLOSED_LOOP_SCENARIOS:
         for nd in device_counts:
-            r = simulate(name, base, devices=nd, closed_loop=True,
-                         collect_segments=False)
-            rows.append({
-                "scenario": name,
-                "devices": nd,
-                "engine": r.engine,
-                "sync": r.sync,
-                "workgroups": base.workgroups,
-                "flag_reads": r.flag_reads,
-                "nonflag_reads": r.nonflag_reads,
-                "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
-                "wtt_enacted": r.wtt_enacted,
-                "kernel_span_ns": r.kernel_span_ns,
-                "sim_cycles": r.sim_cycles,
-                "wall_time_s": r.wall_time_s,
-            })
-            print(f"{name:16s} {nd:>7d} {r.kernel_span_ns:>12,.0f} "
-                  f"{r.flag_reads:>11,} {r.wtt_enacted:>11,} "
-                  f"{r.wall_time_s * 1e3:>9.2f}")
+            best = None
+            for _ in range(max(1, args.repeats)):
+                r = simulate(name, base, devices=nd, closed_loop=True,
+                             collect_segments=False)
+                row = {
+                    "scenario": name,
+                    "devices": nd,
+                    "engine": r.engine,
+                    "sync": r.sync,
+                    "workgroups": base.workgroups,
+                    "flag_reads": r.flag_reads,
+                    "nonflag_reads": r.nonflag_reads,
+                    "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
+                    "wtt_enacted": r.wtt_enacted,
+                    "kernel_span_ns": r.kernel_span_ns,
+                    "sim_cycles": r.sim_cycles,
+                    "wall_time_s": r.wall_time_s,
+                }
+                if best is not None:
+                    for k in COUNTER_KEYS:
+                        assert row[k] == best[k], (
+                            f"nondeterministic {k}: {row[k]} != {best[k]}"
+                        )
+                if best is None or row["wall_time_s"] < best["wall_time_s"]:
+                    best = row
+            rows.append(best)
+            print(f"{name:16s} {nd:>7d} {best['kernel_span_ns']:>12,.0f} "
+                  f"{best['flag_reads']:>11,} {best['wtt_enacted']:>11,} "
+                  f"{best['wall_time_s'] * 1e3:>9.2f}")
 
     # cross-engine spot check at the smallest device count: the cycle and
     # event engines must stay bit-identical in the closed loop
@@ -83,13 +172,23 @@ def main() -> None:
     print(f"[bench] multi_device {'PASS' if agree else 'FAIL'} "
           f"({len(rows)} rows)")
 
+    failures = []
+    if args.check:
+        failures = check_against_baseline(
+            rows, args.check, args.wall_factor, args.wall_grace
+        )
+        for f_ in failures:
+            print(f"[bench] REGRESSION {f_}")
+        print(f"[bench] baseline check "
+              f"{'PASS' if not failures else 'FAIL'} vs {args.check}")
+
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"rows": rows, "engines_agree": agree}, f, indent=1)
     print(f"[bench] wrote {args.out}")
-    if not agree:
+    if not agree or failures:
         sys.exit(1)
 
 

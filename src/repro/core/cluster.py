@@ -79,6 +79,7 @@ class Cluster:
         perturb: PerturbLike = None,
         collect_segments: bool = True,
         fabric: Optional[FabricModel] = None,
+        cohorts: bool = True,
     ):
         self.cfg = cfg.validate()
         self.scenario = scenario
@@ -114,6 +115,7 @@ class Cluster:
                 perturb=self._perturb_for(d),
                 device_id=d,
                 emit_sink=self._on_emit,
+                cohorts=cohorts,
             )
             wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
             self.nodes.append(ClusterNode(d, memory, monitor, target, wtt))
@@ -140,18 +142,33 @@ class Cluster:
         return self.perturb
 
     def _on_emit(
-        self, src: int, wg_id: int, phase_idx: int, spec: PhaseSpec, cycle: int
+        self,
+        src: int,
+        wg_id: int,
+        phase_idx: int,
+        spec: PhaseSpec,
+        cycle: int,
+        count: int = 1,
     ) -> None:
-        """TargetDevice sink: fire ``spec.emits`` for a completed phase."""
-        n_wgs = len(self.nodes[src].target.wgs)
+        """TargetDevice sink: fire ``spec.emits`` for a completed phase.
+
+        ``count`` is the number of workgroups the completing cohort stands
+        for: "last" coalescing advances its completion counter by that many,
+        and "each" emission routes one message per represented workgroup (in
+        the same order the per-workgroup interpreter would have).
+        """
+        n_wgs = self.nodes[src].target.n_wgs
         for i, op in enumerate(spec.emits):
             if op.coalesce == "last":
                 key = (src, phase_idx, i)
-                seen = self._emit_counts.get(key, 0) + 1
+                seen = self._emit_counts.get(key, 0) + count
                 self._emit_counts[key] = seen
                 if seen < n_wgs:
                     continue
-            self._route(src, op, cycle)
+                self._route(src, op, cycle)
+            else:  # "each"
+                for _ in range(count):
+                    self._route(src, op, cycle)
 
     def _route(self, src: int, op: EmitOp, cycle: int) -> None:
         cfg = self.cfg

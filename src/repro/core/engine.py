@@ -23,6 +23,7 @@ other's WTTs mid-run (closed-loop clusters).
 
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass
 from typing import List, Sequence, Tuple
@@ -142,9 +143,22 @@ class CyclePollEngine:
 
 
 class EventQueueEngine:
-    """Event-driven engine using the WTTs as native event queues."""
+    """Event-driven engine using the WTTs as native event queues.
+
+    The next event time is tracked in one **global calendar**: a heap over
+    ``(cycle, kind, node)`` entries (kind 0 = WTT head, 1 = device transition)
+    with *lazy invalidation* — entries are validated against the node's actual
+    next event on pop, and corrected entries are re-pushed.  Cross-device
+    registrations (closed-loop emissions landing in a peer's WTT mid-run) are
+    captured by the WTT's ``on_register`` hook, so advancing an N-device
+    cluster costs O(log N) per event instead of the former O(N) scan of every
+    WTT head and device queue.  Intra-cycle ordering is unchanged: writes
+    enact before device transitions at equal cycles, devices in id order.
+    """
 
     name = "event"
+
+    _KIND_WTT, _KIND_DEV = 0, 1
 
     def run(self, device: TargetDevice, wtt: WriteTrackingTable) -> EngineResult:
         return self.run_nodes([(device, wtt)])
@@ -152,30 +166,85 @@ class EventQueueEngine:
     def run_nodes(self, nodes: Sequence[Node]) -> EngineResult:
         t0 = time.perf_counter()
         last_cycle = 0
-        while True:
-            # global next event time across every WTT and device queue
-            nxt = None
-            for dev, wtt in nodes:
-                for c in (wtt.peek_wakeup_cycle(), dev.next_transition_cycle()):
-                    if c is not None and (nxt is None or c < nxt):
-                        nxt = c
-            if nxt is None:
-                if all(dev.all_done for dev, _ in nodes):
+        K_WTT, K_DEV = self._KIND_WTT, self._KIND_DEV
+        cal: List[Tuple[int, int, int]] = []
+        push = heapq.heappush
+        pop = heapq.heappop
+
+        def push_dev(i: int, dev: TargetDevice) -> None:
+            c = dev.next_transition_cycle()
+            if c is not None:
+                push(cal, (c, K_DEV, i))
+
+        saved_hooks = [wtt.on_register for _, wtt in nodes]
+        try:
+            for i, (dev, wtt) in enumerate(nodes):
+                # every registration (seed traces were registered before the
+                # run; these are mid-run cross-device emissions) lands in the
+                # calendar the moment it happens
+                wtt.on_register = (
+                    lambda cyc, i=i: push(cal, (cyc, K_WTT, i))
+                )
+                c = wtt.peek_wakeup_cycle()
+                if c is not None:
+                    push(cal, (c, K_WTT, i))
+                push_dev(i, dev)
+
+            while True:
+                # earliest still-valid calendar entry (lazy invalidation:
+                # drained/deferred entries are dropped or re-timed on pop)
+                nxt = None
+                while cal:
+                    c, kind, i = cal[0]
+                    dev, wtt = nodes[i]
+                    cur = (
+                        wtt.peek_wakeup_cycle()
+                        if kind == K_WTT
+                        else dev.next_transition_cycle()
+                    )
+                    if cur != c:
+                        pop(cal)
+                        if cur is not None:
+                            push(cal, (cur, kind, i))
+                        continue
+                    nxt = c
                     break
-                raise EidolaDeadlock(_deadlock_message(nodes, last_cycle))
-            # writes enact before device transitions at equal cycles, devices
-            # in id order — matching the cycle engine's intra-cycle ordering
-            for dev, wtt in nodes:
-                if wtt.peek_wakeup_cycle() == nxt:
+                if nxt is None:
+                    if all(dev.all_done for dev, _ in nodes):
+                        break
+                    raise EidolaDeadlock(_deadlock_message(nodes, last_cycle))
+
+                # gather every node with an event at nxt (dedupe duplicates)
+                due_wtt: set = set()
+                due_dev: set = set()
+                while cal and cal[0][0] == nxt:
+                    _, kind, i = pop(cal)
+                    (due_wtt if kind == K_WTT else due_dev).add(i)
+                # writes enact before device transitions at equal cycles,
+                # devices in id order — matching the cycle engine's
+                # intra-cycle ordering
+                for i in sorted(due_wtt):
+                    dev, wtt = nodes[i]
+                    if wtt.peek_wakeup_cycle() != nxt:
+                        continue  # stale duplicate
                     cycle, group = wtt.pop_next_group()
                     for w in group:
                         dev.memory.enact_xgmi_write(w, cycle)
                     dev.on_writes_enacted(group, cycle)
-            for dev, _ in nodes:
-                c = dev.next_transition_cycle()
-                if c is not None and c <= nxt:
-                    dev.process_until(nxt)
-            last_cycle = max(last_cycle, nxt)
+                    c = wtt.peek_wakeup_cycle()
+                    if c is not None:
+                        push(cal, (c, K_WTT, i))
+                    due_dev.add(i)  # wakes may schedule transitions <= nxt
+                for i in sorted(due_dev):
+                    dev, _ = nodes[i]
+                    c = dev.next_transition_cycle()
+                    if c is not None and c <= nxt:
+                        dev.process_until(nxt)
+                    push_dev(i, dev)
+                last_cycle = max(last_cycle, nxt)
+        finally:
+            for (_, wtt), hook in zip(nodes, saved_hooks):
+                wtt.on_register = hook
         return EngineResult(
             sim_cycles=last_cycle,
             wall_time_s=time.perf_counter() - t0,

@@ -76,13 +76,16 @@ class TrafficOp:
         if self.n < 0 or self.bytes_each < 0:
             raise ValueError("traffic counts must be non-negative")
 
-    def apply(self, memory) -> None:
+    def apply(self, memory, times: int = 1) -> None:
+        """Account this op ``times`` times (cohort batching: the counters are
+        linear in ``n``, so ``times`` workgroups completing the same phase
+        account exactly ``n * times`` requests)."""
         if self.kind == "reads":
-            memory.bulk_reads(self.n, bytes_each=self.bytes_each)
+            memory.bulk_reads(self.n * times, bytes_each=self.bytes_each)
         elif self.kind == "local_writes":
-            memory.bulk_local_writes(self.n, bytes_each=self.bytes_each)
+            memory.bulk_local_writes(self.n * times, bytes_each=self.bytes_each)
         else:
-            memory.issue_xgmi_out(self.n, bytes_each=self.bytes_each)
+            memory.issue_xgmi_out(self.n * times, bytes_each=self.bytes_each)
 
 
 def reads(n: int, bytes_each: int) -> TrafficOp:

@@ -127,39 +127,40 @@ class AllToAllScenario(Scenario):
         ]
         if not emit:
             dispatch_traffic.append(xgmi_out(n_peers, 8))
-        out: List[WGProgram] = []
-        for wg in range(cfg.workgroups):
-            cu = wg % cfg.n_cus
-            wave = wg // cfg.n_cus
-            out.append(
-                WGProgram(
-                    wg=wg,
-                    cu=cu,
-                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
-                    phases=(
-                        # route + push our token shard to every peer, then the
-                        # completion flag write to each of them
-                        PhaseSpec(
-                            "a2a_dispatch",
-                            cycles,
-                            traffic=tuple(dispatch_traffic),
-                            emits=emits,
-                        ),
-                        # incast barrier on every peer's completion flag
-                        PhaseSpec("wait_flags", wait_addrs=wait_addrs),
-                        # combine: read the n-1 received shards + our own
-                        PhaseSpec(
-                            "a2a_combine",
-                            cycles * cfg.n_devices,
-                            traffic=(
-                                reads(sectors * cfg.n_devices, cfg.sector_bytes),
-                                local_writes(1, share),
-                            ),
-                        ),
-                    ),
-                )
+        # one shared phases tuple per rank (see ring_allreduce._rank_programs:
+        # phases are workgroup-invariant, so stamping per-WG records against a
+        # shared tuple removes the O(workgroups) construction factor and feeds
+        # the cohort interpreter's identity-based grouping)
+        shared = (
+            # route + push our token shard to every peer, then the
+            # completion flag write to each of them
+            PhaseSpec(
+                "a2a_dispatch",
+                cycles,
+                traffic=tuple(dispatch_traffic),
+                emits=emits,
+            ),
+            # incast barrier on every peer's completion flag
+            PhaseSpec("wait_flags", wait_addrs=wait_addrs),
+            # combine: read the n-1 received shards + our own
+            PhaseSpec(
+                "a2a_combine",
+                cycles * cfg.n_devices,
+                traffic=(
+                    reads(sectors * cfg.n_devices, cfg.sector_bytes),
+                    local_writes(1, share),
+                ),
+            ),
+        )
+        return [
+            WGProgram(
+                wg=wg,
+                cu=wg % cfg.n_cus,
+                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
+                phases=shared,
             )
-        return out
+            for wg in range(cfg.workgroups)
+        ]
 
     def programs(self) -> List[WGProgram]:
         return self._rank_programs(0, emit=False)

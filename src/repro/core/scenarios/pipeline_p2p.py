@@ -112,48 +112,54 @@ class PipelineP2PScenario(Scenario):
                 f"{self.n_microbatches} (amap has {self.amap.flag_slots})"
             )
 
+    def _stamp(self, phases: List[PhaseSpec]) -> List[WGProgram]:
+        """Stamp per-WG program records against one shared phases tuple.
+
+        Phases are workgroup-invariant — only (wg, cu, dispatch_cycle) vary —
+        so sharing the tuple removes the O(workgroups) construction factor and
+        feeds the cohort interpreter's identity-based grouping."""
+        cfg = self.cfg
+        shared = tuple(phases)
+        return [
+            WGProgram(
+                wg=wg,
+                cu=wg % cfg.n_cus,
+                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
+                phases=shared,
+            )
+            for wg in range(cfg.workgroups)
+        ]
+
     def programs(self) -> List[WGProgram]:
         cfg = self.cfg
         self._check_slots()
         share, sectors, io_cycles, fwd_cycles = self._shares()
-        out: List[WGProgram] = []
-        for wg in range(cfg.workgroups):
-            cu = wg % cfg.n_cus
-            wave = wg // cfg.n_cus
-            phases: List[PhaseSpec] = []
-            for m in range(self.n_microbatches):
-                phases.append(
-                    PhaseSpec(
-                        "wait_flags",
-                        wait_addrs=(self.amap.flag_addr(self.upstream, slot=m),),
-                    )
-                )
-                phases.append(
-                    PhaseSpec(
-                        "fwd_compute",
-                        fwd_cycles,
-                        traffic=(
-                            reads(sectors, cfg.sector_bytes),
-                            local_writes(1, share),
-                        ),
-                    )
-                )
-                phases.append(
-                    PhaseSpec(
-                        "p2p_send",
-                        io_cycles,
-                        traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
-                    )
-                )
-            out.append(
-                WGProgram(
-                    wg=wg,
-                    cu=cu,
-                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
-                    phases=tuple(phases),
+        phases: List[PhaseSpec] = []
+        for m in range(self.n_microbatches):
+            phases.append(
+                PhaseSpec(
+                    "wait_flags",
+                    wait_addrs=(self.amap.flag_addr(self.upstream, slot=m),),
                 )
             )
-        return out
+            phases.append(
+                PhaseSpec(
+                    "fwd_compute",
+                    fwd_cycles,
+                    traffic=(
+                        reads(sectors, cfg.sector_bytes),
+                        local_writes(1, share),
+                    ),
+                )
+            )
+            phases.append(
+                PhaseSpec(
+                    "p2p_send",
+                    io_cycles,
+                    traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
+                )
+            )
+        return self._stamp(phases)
 
     def programs_for(self, device: int) -> List[WGProgram]:
         """Closed loop: device ``r`` is pipeline stage ``r`` (0 = source).
@@ -173,65 +179,53 @@ class PipelineP2PScenario(Scenario):
         n = cfg.n_devices
         first = device == 0
         last = device == n - 1
-        out: List[WGProgram] = []
-        for wg in range(cfg.workgroups):
-            cu = wg % cfg.n_cus
-            wave = wg // cfg.n_cus
-            phases: List[PhaseSpec] = []
-            for m in range(self.n_microbatches):
-                if not first:
-                    phases.append(
-                        PhaseSpec(
-                            "wait_flags",
-                            wait_addrs=(
-                                self.amap.flag_addr(device - 1, slot=m),
-                            ),
-                        )
-                    )
+        phases: List[PhaseSpec] = []
+        for m in range(self.n_microbatches):
+            if not first:
                 phases.append(
                     PhaseSpec(
-                        "fwd_compute",
-                        fwd_cycles,
-                        traffic=(
-                            reads(sectors, cfg.sector_bytes),
-                            local_writes(1, share),
+                        "wait_flags",
+                        wait_addrs=(
+                            self.amap.flag_addr(device - 1, slot=m),
                         ),
                     )
                 )
-                if last:
-                    # final stage: write the microbatch result locally
-                    phases.append(
-                        PhaseSpec(
-                            "p2p_send",
-                            io_cycles,
-                            traffic=(local_writes(1, share),),
-                        )
-                    )
-                else:
-                    phases.append(
-                        PhaseSpec(
-                            "p2p_send",
-                            io_cycles,
-                            traffic=(xgmi_out(1, share),),
-                            emits=(
-                                EmitOp(
-                                    device + 1,
-                                    slot=m,
-                                    payload_bytes=self.activation_bytes,
-                                    data_writes=self.writes_per_microbatch,
-                                ),
-                            ),
-                        )
-                    )
-            out.append(
-                WGProgram(
-                    wg=wg,
-                    cu=cu,
-                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
-                    phases=tuple(phases),
+            phases.append(
+                PhaseSpec(
+                    "fwd_compute",
+                    fwd_cycles,
+                    traffic=(
+                        reads(sectors, cfg.sector_bytes),
+                        local_writes(1, share),
+                    ),
                 )
             )
-        return out
+            if last:
+                # final stage: write the microbatch result locally
+                phases.append(
+                    PhaseSpec(
+                        "p2p_send",
+                        io_cycles,
+                        traffic=(local_writes(1, share),),
+                    )
+                )
+            else:
+                phases.append(
+                    PhaseSpec(
+                        "p2p_send",
+                        io_cycles,
+                        traffic=(xgmi_out(1, share),),
+                        emits=(
+                            EmitOp(
+                                device + 1,
+                                slot=m,
+                                payload_bytes=self.activation_bytes,
+                                data_writes=self.writes_per_microbatch,
+                            ),
+                        ),
+                    )
+                )
+        return self._stamp(phases)
 
     def traces(self) -> TraceBundle:
         cfg = self.cfg

@@ -129,52 +129,55 @@ class RingAllReduceScenario(Scenario):
                 ),
             )
 
-        out: List[WGProgram] = []
-        for wg in range(cfg.workgroups):
-            cu = wg % cfg.n_cus
-            wave = wg // cfg.n_cus
-            phases: List[PhaseSpec] = [
-                # step 0: push our own chunk downstream before waiting
+        # The phase list is identical for every workgroup of the rank — only
+        # (wg, cu, dispatch_cycle) vary — so build ONE shared phases tuple and
+        # stamp per-WG program records against it.  This collapses program
+        # construction from O(workgroups x steps) PhaseSpec allocations per
+        # rank to O(steps), and the shared tuple identity lets the cohort
+        # interpreter group workgroups without comparing phase lists.
+        phases: List[PhaseSpec] = [
+            # step 0: push our own chunk downstream before waiting
+            PhaseSpec(
+                "ring_send",
+                cycles,
+                traffic=(reads(sectors, cfg.sector_bytes), xgmi_out(1, share)),
+                emits=flag_out(0),
+            )
+        ]
+        for s in range(self.steps):
+            phases.append(
                 PhaseSpec(
-                    "ring_send",
-                    cycles,
-                    traffic=(reads(sectors, cfg.sector_bytes), xgmi_out(1, share)),
-                    emits=flag_out(0),
-                )
-            ]
-            for s in range(self.steps):
-                phases.append(
-                    PhaseSpec(
-                        "wait_flags",
-                        wait_addrs=(self.amap.flag_addr(upstream, slot=s),),
-                    )
-                )
-                reducing = s < rs_steps
-                last = s == self.steps - 1
-                traffic = [
-                    # incoming chunk + (while reducing) the local accumulator
-                    reads(sectors * (2 if reducing else 1), cfg.sector_bytes),
-                    local_writes(1, share),
-                ]
-                if not last:
-                    traffic.append(xgmi_out(1, share))
-                phases.append(
-                    PhaseSpec(
-                        "ring_reduce" if reducing else "ring_gather",
-                        cycles,
-                        traffic=tuple(traffic),
-                        emits=() if last else flag_out(s + 1),
-                    )
-                )
-            out.append(
-                WGProgram(
-                    wg=wg,
-                    cu=cu,
-                    dispatch_cycle=wave * cfg.dispatch_stagger_cycles,
-                    phases=tuple(phases),
+                    "wait_flags",
+                    wait_addrs=(self.amap.flag_addr(upstream, slot=s),),
                 )
             )
-        return out
+            reducing = s < rs_steps
+            last = s == self.steps - 1
+            traffic = [
+                # incoming chunk + (while reducing) the local accumulator
+                reads(sectors * (2 if reducing else 1), cfg.sector_bytes),
+                local_writes(1, share),
+            ]
+            if not last:
+                traffic.append(xgmi_out(1, share))
+            phases.append(
+                PhaseSpec(
+                    "ring_reduce" if reducing else "ring_gather",
+                    cycles,
+                    traffic=tuple(traffic),
+                    emits=() if last else flag_out(s + 1),
+                )
+            )
+        shared = tuple(phases)
+        return [
+            WGProgram(
+                wg=wg,
+                cu=wg % cfg.n_cus,
+                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
+                phases=shared,
+            )
+            for wg in range(cfg.workgroups)
+        ]
 
     def programs(self) -> List[WGProgram]:
         return self._rank_programs(0, emit=False)

@@ -1,4 +1,4 @@
-"""Detailed target-device model: a per-workgroup phase-program interpreter.
+"""Detailed target-device model: a cohort-batched phase-program interpreter.
 
 The paper simulates exactly one device in detailed timing mode; its figures
 measure (a) per-workgroup phase timelines (Figs. 1/2) and (b) memory-read
@@ -19,9 +19,21 @@ sequence of flag addresses under one of two synchronization policies:
                 cycle on the same CU (the fill triggered by the waking write
                 serves adjacent waiters).
 
-Any scenario therefore inherits the full synchronization model: ring
-all-reduce steps, all-to-all incast barriers, and pipeline microbatch
-hand-offs wait exactly the way the fused kernel's wait_flags phase does.
+Cohorts
+-------
+Under SPIN with no perturbation, every workgroup of one dispatch wave runs the
+same program from the same start cycle and observes the same flag-visibility
+times, so their interpreter states are *identical forever* — the per-workgroup
+transition loop redundantly recomputes the same advance ``n_cus`` times per
+wave.  The interpreter therefore advances **counted cohorts**: maximal runs of
+consecutive workgroups sharing (dispatch cycle, phase program).  One transition
+advances the whole cohort; traffic is accounted in closed form (each bulk
+counter multiplied by the member count — exactly how ``vector_engine.py``
+already scores spin waits across all workgroups at once), and timeline segments
+are stored once per cohort and stamped per member only at collection time.
+Anything member-dependent — SyncMon requeue jitter / CU-keyed wake coalescing,
+or a perturbation (keyed by wg id) — falls back to singleton cohorts, which is
+bit-for-bit the old per-workgroup interpreter.
 
 The model is engine-agnostic: cycle-poll and event-queue engines drive the
 same transitions and therefore produce bit-identical traffic and timelines.
@@ -48,8 +60,21 @@ class EidolaDeadlock(RuntimeError):
 
 
 @dataclass
-class _WG:
+class _Cohort:
+    """A maximal run of consecutive workgroups in identical interpreter state.
+
+    ``program`` is the first member's :class:`WGProgram`; all members share its
+    ``phases`` and ``dispatch_cycle`` (singleton cohorts additionally make
+    ``program.wg``/``program.cu`` exact).  Segments are stored as
+    ``(phase, start_cycle, end_cycle)`` tuples shared by every member and
+    expanded per workgroup only in :meth:`TargetDevice.collect_segments`.
+    """
+
     program: WGProgram
+    members: Tuple[int, ...]      # consecutive wg ids sharing this state
+    idx: int = 0                  # position in TargetDevice.cohorts
+    count: int = 1                # len(members), denormalized for the hot path
+    phases: Tuple[PhaseSpec, ...] = ()  # program.phases, denormalized
     phase_idx: int = -1           # -1 = not yet dispatched
     phase_start: int = 0          # cycle the current phase began
     done: bool = False
@@ -61,13 +86,13 @@ class _WG:
     in_mwait: bool = False
     t_arm: int = 0                # cycle the current monitor was armed
     wait_start: int = 0
-    segments: List[Segment] = field(default_factory=list)
+    segments: List[Tuple[str, int, int]] = field(default_factory=list)
     desched_segments: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def current(self) -> Optional[PhaseSpec]:
-        if 0 <= self.phase_idx < len(self.program.phases):
-            return self.program.phases[self.phase_idx]
+        if 0 <= self.phase_idx < len(self.phases):
+            return self.phases[self.phase_idx]
         return None
 
 
@@ -79,12 +104,16 @@ class TargetDevice:
     these, each with its own ``device_id``, :class:`DirectoryMemory`,
     :class:`MonitorLog`, and Write Tracking Table.  ``emit_sink`` (set by the
     cluster) receives phase-completion :class:`repro.core.scenario.EmitOp`
-    notifications; without a sink, emits are inert (open-loop degenerate
-    case).
+    notifications — called once per cohort with the member ``count`` so the
+    sink can replay per-workgroup semantics in closed form; without a sink,
+    emits are inert (open-loop degenerate case).
 
     ``scenario`` provides the phase programs via ``programs_for(device_id)``;
     for back-compat a :class:`repro.core.workload.GemvAllReduceWorkload` is
     also accepted and wrapped in the registered ``gemv_allreduce`` scenario.
+
+    ``cohorts=False`` forces singleton cohorts (the pre-batching per-workgroup
+    interpreter); the equivalence tests drive both modes against each other.
     """
 
     def __init__(
@@ -96,7 +125,10 @@ class TargetDevice:
         perturb=None,
         *,
         device_id: int = 0,
-        emit_sink: Optional[Callable[[int, int, int, "PhaseSpec", int], None]] = None,
+        emit_sink: Optional[
+            Callable[[int, int, int, "PhaseSpec", int, int], None]
+        ] = None,
+        cohorts: bool = True,
     ):
         if not isinstance(scenario, Scenario):
             from .scenarios.gemv_allreduce import GemvAllReduceScenario
@@ -116,22 +148,80 @@ class TargetDevice:
         programs = sorted(scenario.programs_for(self.device_id), key=lambda p: p.wg)
         if [p.wg for p in programs] != list(range(len(programs))):
             raise ValueError("WGProgram ids must be contiguous from 0")
-        self.wgs = [_WG(program=p) for p in programs]
+        self.n_wgs = len(programs)
+        # Cohort batching is valid only when no per-member state can diverge:
+        # SyncMon jitters requeues by wg id and coalesces wakes by CU, and a
+        # perturbation scales phases by wg id — both force singletons.
+        batch = cohorts and cfg.sync == SyncPolicy.SPIN and perturb is None
+        self.cohorts: List[_Cohort] = []
+        for p in programs:
+            prev = self.cohorts[-1] if self.cohorts else None
+            if (
+                batch
+                and prev is not None
+                and prev.program.dispatch_cycle == p.dispatch_cycle
+                and (prev.program.phases is p.phases
+                     or prev.program.phases == p.phases)
+            ):
+                prev.members = prev.members + (p.wg,)
+            else:
+                self.cohorts.append(
+                    _Cohort(
+                        program=p,
+                        members=(p.wg,),
+                        idx=len(self.cohorts),
+                        phases=p.phases,
+                    )
+                )
+        for c in self.cohorts:
+            c.count = len(c.members)
+        # wg id -> cohort index (monitor wakes are keyed by wg id)
+        self._by_wg: Dict[int, int] = {
+            wg: c.idx for c in self.cohorts for wg in c.members
+        }
+        # Per-spec unit traffic deltas, keyed by spec identity (phase tuples
+        # are shared across programs, so this is O(distinct specs)).  A phase
+        # completion then costs six integer adds instead of re-walking the
+        # TrafficOp list; the arithmetic is identical to op.apply() per member.
+        self._tdelta: Dict[int, Optional[Tuple[int, int, int, int, int, int]]] = {}
+        for c in self.cohorts:
+            for spec in c.phases:
+                key = id(spec)
+                if key in self._tdelta:
+                    continue
+                if not spec.traffic:
+                    self._tdelta[key] = None
+                    continue
+                nonflag = rbytes = local = wbytes = xout = xbytes = 0
+                for op in spec.traffic:
+                    if op.kind == "reads":
+                        nonflag += op.n
+                        rbytes += op.n * op.bytes_each
+                    elif op.kind == "local_writes":
+                        local += op.n
+                        wbytes += op.n * op.bytes_each
+                    else:  # xgmi_out
+                        xout += op.n
+                        xbytes += op.n * op.bytes_each
+                self._tdelta[key] = (nonflag, rbytes, local, wbytes, xout, xbytes)
 
         # every flag address some program may wait on
         self._watched: Set[int] = set()
-        for p in programs:
-            self._watched.update(p.wait_addresses())
+        for c in self.cohorts:
+            self._watched.update(c.program.wait_addresses())
         self.flag_set_cycle: Dict[int, int] = {}
-        # spin mode: flag addr -> set of blocked wg ids
+        # spin mode: flag addr -> set of blocked cohort indexes
         self._spin_waiters: Dict[int, Set[int]] = {}
         # syncmon: wg -> monitor entry currently armed
         self._armed: Dict[int, object] = {}
 
-        # transition list managed by the engine via (cycle, wg) pairs
-        self._ready: List[Tuple[int, int]] = []
-        for p in programs:
-            self._push(p.dispatch_cycle, p.wg)
+        # transition queue managed via (cycle, first_member, cohort_idx);
+        # first_member is the tie-break that reproduces per-workgroup pop
+        # order (cohorts are consecutive id runs, so ordering by the first
+        # member orders every member)
+        self._ready: List[Tuple[int, int, int]] = []
+        for ci, c in enumerate(self.cohorts):
+            self._push(c.program.dispatch_cycle, ci)
         self.done_count = 0
         self.kernel_end_cycle = 0
 
@@ -139,8 +229,8 @@ class TargetDevice:
     # transition queue (a tiny heap the engines drain)
     # ------------------------------------------------------------------
 
-    def _push(self, cycle: int, wg_id: int) -> None:
-        heapq.heappush(self._ready, (int(cycle), wg_id))
+    def _push(self, cycle: int, ci: int) -> None:
+        heapq.heappush(self._ready, (int(cycle), self.cohorts[ci].members[0], ci))
 
     def next_transition_cycle(self) -> Optional[int]:
         return self._ready[0][0] if self._ready else None
@@ -148,15 +238,17 @@ class TargetDevice:
     def process_until(self, cycle: int) -> None:
         """Fire all transitions scheduled at or before ``cycle``."""
         while self._ready and self._ready[0][0] <= cycle:
-            t, wg_id = heapq.heappop(self._ready)
-            self._advance(self.wgs[wg_id], t)
+            t, _, ci = heapq.heappop(self._ready)
+            self._advance(self.cohorts[ci], t)
 
     @property
     def all_done(self) -> bool:
-        return self.done_count == len(self.wgs)
+        return self.done_count == self.n_wgs
 
     def blocked_count(self) -> int:
-        return sum(1 for w in self.wgs if w.in_wait and w.blocked_on is not None)
+        return sum(
+            c.count for c in self.cohorts if c.in_wait and c.blocked_on is not None
+        )
 
     def blocked_waits(self) -> Dict[int, List[int]]:
         """Unsatisfied flag address -> sorted blocked workgroup ids.
@@ -165,143 +257,146 @@ class TargetDevice:
         set (decode them with ``self.amap.decode_flag``).
         """
         out: Dict[int, List[int]] = {}
-        for w in self.wgs:
-            if w.in_wait and w.blocked_on is not None:
-                out.setdefault(w.blocked_on, []).append(w.program.wg)
+        for c in self.cohorts:
+            if c.in_wait and c.blocked_on is not None:
+                out.setdefault(c.blocked_on, []).extend(c.members)
         return {addr: sorted(wgs) for addr, wgs in out.items()}
-
-    # ------------------------------------------------------------------
-    # phase durations (perturbable)
-    # ------------------------------------------------------------------
-
-    def _dur(self, wg: _WG, spec: PhaseSpec) -> int:
-        base = spec.duration_cycles
-        if self.perturb is not None and base > 0:
-            base = self.perturb.scale_phase(wg.program.wg, spec.name, base)
-        return base
 
     # ------------------------------------------------------------------
     # phase completion accounting
     # ------------------------------------------------------------------
 
-    def _complete_phase(self, wg: _WG, spec: PhaseSpec, start: int, end: int) -> None:
-        ns = self.cfg.cycles_to_ns
+    def _complete_phase(self, c: _Cohort, spec: PhaseSpec, start: int, end: int) -> None:
         # timed phases always get a timeline segment (even zero-length, as the
         # seed's state machine did); wait phases only when time actually passed
-        if end > start or not spec.is_wait:
-            wg.segments.append(
-                Segment(
-                    wg=wg.program.wg,
-                    phase=spec.name,
-                    start_ns=ns(start),
-                    end_ns=ns(end),
-                    device=self.device_id,
-                )
-            )
-        for op in spec.traffic:
-            op.apply(self.memory)
+        if end > start or spec.wait_addrs is None:
+            c.segments.append((spec.name, start, end))
+        d = self._tdelta[id(spec)]
+        if d is not None:
+            # closed-form cohort accounting: identical arithmetic to
+            # TrafficOp.apply(memory, times=count), precomputed per spec
+            t = self.memory.traffic
+            n = c.count
+            t.nonflag_reads += d[0] * n
+            t.read_bytes += d[1] * n
+            t.local_writes += d[2] * n
+            t.write_bytes += d[3] * n
+            t.xgmi_writes_out += d[4] * n
+            t.xgmi_bytes_out += d[5] * n
         if spec.emits and self.emit_sink is not None:
-            self.emit_sink(self.device_id, wg.program.wg, wg.phase_idx, spec, end)
+            self.emit_sink(
+                self.device_id, c.program.wg, c.phase_idx, spec, end, c.count
+            )
 
     # ------------------------------------------------------------------
     # the program interpreter
     # ------------------------------------------------------------------
 
-    def _advance(self, wg: _WG, now: int) -> None:
-        if wg.done:
+    def _advance(self, c: _Cohort, now: int) -> None:
+        if c.done:
             return
-        if wg.in_wait:
-            self._run_wait(wg, now)
+        if c.in_wait:
+            self._run_wait(c, now)
             return
         # completing the current timed phase (if dispatched)
-        spec = wg.current
-        if spec is not None:
-            self._complete_phase(wg, spec, wg.phase_start, now)
-        self._enter_next_phase(wg, now)
+        if c.phase_idx >= 0:
+            self._complete_phase(c, c.phases[c.phase_idx], c.phase_start, now)
+        self._enter_next_phase(c, now)
 
-    def _enter_next_phase(self, wg: _WG, now: int) -> None:
-        wg.phase_idx += 1
-        wg.phase_start = now
-        spec = wg.current
-        if spec is None:
-            self._finish(wg, now)
+    def _enter_next_phase(self, c: _Cohort, now: int) -> None:
+        c.phase_idx += 1
+        c.phase_start = now
+        if c.phase_idx >= len(c.phases):
+            self._finish(c, now)
             return
-        if spec.is_wait:
-            wg.in_wait = True
-            wg.flag_idx = 0
-            wg.t_cursor = now
-            wg.wait_start = now
-            self._run_wait(wg, now)
+        spec = c.phases[c.phase_idx]
+        if spec.wait_addrs is not None:
+            c.in_wait = True
+            c.flag_idx = 0
+            c.t_cursor = now
+            c.wait_start = now
+            self._run_wait(c, now)
         else:
-            self._push(now + self._dur(wg, spec), wg.program.wg)
+            dur = spec.duration_cycles
+            if self.perturb is not None and dur > 0:
+                dur = self.perturb.scale_phase(c.program.wg, spec.name, dur)
+            self._push(now + dur, c.idx)
 
-    def _finish(self, wg: _WG, now: int) -> None:
-        wg.done = True
-        self.done_count += 1
+    def _finish(self, c: _Cohort, now: int) -> None:
+        c.done = True
+        self.done_count += c.count
         self.kernel_end_cycle = max(self.kernel_end_cycle, now)
 
     # ------------------------------------------------------------------
     # WAIT phase: spin / syncmon
     # ------------------------------------------------------------------
 
-    def _run_wait(self, wg: _WG, now: int) -> None:
+    def _run_wait(self, c: _Cohort, now: int) -> None:
         cfg = self.cfg
-        spec = wg.current
-        assert spec is not None and spec.wait_addrs is not None
+        spec = c.phases[c.phase_idx]
+        assert spec.wait_addrs is not None
         addrs = spec.wait_addrs
-        wg.blocked_on = None
-        while wg.flag_idx < len(addrs):
-            addr = addrs[wg.flag_idx]
-            set_c = self.flag_set_cycle.get(addr)
-            if set_c is not None and set_c <= wg.t_cursor:
-                # observe-and-advance: a single read sees the flag set
-                self.memory.bulk_reads(1, bytes_each=8, flag=True)
-                wg.t_cursor += cfg.flag_check_cycles
-                wg.flag_idx += 1
+        n_addrs = len(addrs)
+        n = c.count
+        traffic = self.memory.traffic
+        flag_set = self.flag_set_cycle
+        check = cfg.flag_check_cycles
+        poll = cfg.poll_interval_cycles
+        spin = cfg.sync == SyncPolicy.SPIN
+        c.blocked_on = None
+        while c.flag_idx < n_addrs:
+            addr = addrs[c.flag_idx]
+            set_c = flag_set.get(addr)
+            if set_c is not None and set_c <= c.t_cursor:
+                # observe-and-advance: a single read (per member) sees the
+                # flag set (inline of memory.bulk_reads(n, 8, flag=True))
+                traffic.flag_reads += n
+                traffic.read_bytes += 8 * n
+                c.t_cursor += check
+                c.flag_idx += 1
                 continue
-            if cfg.sync == SyncPolicy.SPIN:
+            if spin:
                 if set_c is not None:
-                    # flag will be visible at set_c > t_cursor: poll until then
-                    nticks = math.ceil(
-                        (set_c - wg.t_cursor) / cfg.poll_interval_cycles
-                    )
-                    self.memory.bulk_reads(nticks + 1, bytes_each=8, flag=True)
-                    wg.t_cursor += (
-                        nticks * cfg.poll_interval_cycles + cfg.flag_check_cycles
-                    )
-                    wg.flag_idx += 1
+                    # flag will be visible at set_c > t_cursor: poll until
+                    # then — every member polls the same ticks, so the cohort
+                    # accounts nticks+1 reads per member in closed form
+                    nticks = -((set_c - c.t_cursor) // -poll)
+                    traffic.flag_reads += n * (nticks + 1)
+                    traffic.read_bytes += 8 * n * (nticks + 1)
+                    c.t_cursor += nticks * poll + check
+                    c.flag_idx += 1
                     continue
                 # unset with unknown set time: block until notify
-                wg.blocked_on = addr
-                self._spin_waiters.setdefault(addr, set()).add(wg.program.wg)
+                c.blocked_on = addr
+                self._spin_waiters.setdefault(addr, set()).add(c.idx)
                 return
-            else:  # SYNCMON
+            else:  # SYNCMON (singleton cohorts by construction)
                 # one check read (sees unset or not-yet-visible)
-                self.memory.bulk_reads(1, bytes_each=8, flag=True)
-                t_arm = wg.t_cursor + cfg.monitor_arm_cycles
+                self.memory.bulk_reads(n, bytes_each=8, flag=True)
+                t_arm = c.t_cursor + cfg.monitor_arm_cycles
                 if set_c is not None and set_c <= t_arm:
                     # race window: write landed between check and mwait; the
                     # mwait returns immediately after its own validation read
-                    self.memory.bulk_reads(1, bytes_each=8, flag=True)
+                    self.memory.bulk_reads(n, bytes_each=8, flag=True)
                     if self.monitor_log is not None:
-                        self.monitor_log.stats["immediate_mwait_returns"] += 1
-                    wg.t_cursor = t_arm + cfg.flag_check_cycles
-                    wg.flag_idx += 1
+                        self.monitor_log.stats["immediate_mwait_returns"] += n
+                    c.t_cursor = t_arm + cfg.flag_check_cycles
+                    c.flag_idx += 1
                     continue
                 # arm + deschedule
                 entry = self.monitor_log.monitor(addr, 8, 1)
-                entry.waiting_wfs.add(wg.program.wg)
-                self._armed[wg.program.wg] = entry
-                wg.blocked_on = addr
-                wg.in_mwait = True
-                wg.t_arm = t_arm
-                wg.desched_segments.append((t_arm, -1))  # end filled on wake
+                entry.waiting_wfs.add(c.program.wg)
+                self._armed[c.program.wg] = entry
+                c.blocked_on = addr
+                c.in_mwait = True
+                c.t_arm = t_arm
+                c.desched_segments.append((t_arm, -1))  # end filled on wake
                 return
         # all flags observed — wait phase completes at the poll cursor
-        end = wg.t_cursor
-        self._complete_phase(wg, spec, wg.wait_start, end)
-        wg.in_wait = False
-        self._enter_next_phase(wg, end)
+        end = c.t_cursor
+        self._complete_phase(c, spec, c.wait_start, end)
+        c.in_wait = False
+        self._enter_next_phase(c, end)
 
     # ------------------------------------------------------------------
     # peer-write enactment hooks (called by the engines)
@@ -314,6 +409,9 @@ class TargetDevice:
         observers).  Here we resolve flag visibility for blocked workgroups.
         """
         cfg = self.cfg
+        poll = cfg.poll_interval_cycles
+        check = cfg.flag_check_cycles
+        traffic = self.memory.traffic
         for w in writes:
             if w.addr not in self._watched:
                 continue
@@ -321,19 +419,19 @@ class TargetDevice:
                 self.flag_set_cycle[w.addr] = cycle
             if cfg.sync == SyncPolicy.SPIN:
                 waiters = self._spin_waiters.pop(w.addr, set())
-                for wg_id in sorted(waiters):
-                    wg = self.wgs[wg_id]
-                    # account the polls from t_cursor up to the observation tick
-                    nticks = math.ceil(
-                        max(0, cycle - wg.t_cursor) / cfg.poll_interval_cycles
-                    )
-                    self.memory.bulk_reads(nticks + 1, bytes_each=8, flag=True)
-                    wg.t_cursor += (
-                        nticks * cfg.poll_interval_cycles + cfg.flag_check_cycles
-                    )
-                    wg.flag_idx += 1
-                    wg.blocked_on = None
-                    self._push(wg.t_cursor, wg_id)
+                for ci in sorted(waiters):
+                    c = self.cohorts[ci]
+                    # account the polls from t_cursor up to the observation
+                    # tick, closed-form across the cohort's members
+                    gap = cycle - c.t_cursor
+                    nticks = -(gap // -poll) if gap > 0 else 0
+                    m = c.count * (nticks + 1)
+                    traffic.flag_reads += m
+                    traffic.read_bytes += 8 * m
+                    c.t_cursor += nticks * poll + check
+                    c.flag_idx += 1
+                    c.blocked_on = None
+                    self._push(c.t_cursor, ci)
         if cfg.sync == SyncPolicy.SYNCMON and self.monitor_log is not None:
             pending = self.monitor_log.pop_wakes_until(
                 cycle + cfg.wake_latency_cycles
@@ -342,48 +440,48 @@ class TargetDevice:
             # validation read accounting
             groups: Dict[Tuple[int, int], List[int]] = {}
             for wg_id, wake_c in pending:
-                wg = self.wgs[wg_id]
-                if not wg.in_mwait:
+                c = self.cohorts[self._by_wg[wg_id]]
+                if not c.in_mwait:
                     continue
-                if cycle <= wg.t_arm:
+                if cycle <= c.t_arm:
                     # race window: the write landed between the check read and
                     # the monitor arming; the mwait returns immediately after
                     # its own (uncoalesced) validation read at arm time
                     self.memory.bulk_reads(1, bytes_each=8, flag=True)
-                    wg.in_mwait = False
+                    c.in_mwait = False
                     self._armed.pop(wg_id, None)
-                    if wg.desched_segments and wg.desched_segments[-1][1] == -1:
-                        wg.desched_segments.pop()  # never actually descheduled
+                    if c.desched_segments and c.desched_segments[-1][1] == -1:
+                        c.desched_segments.pop()  # never actually descheduled
                     if self.monitor_log is not None:
                         self.monitor_log.stats["immediate_mwait_returns"] += 1
-                    wg.blocked_on = None
-                    wg.flag_idx += 1
-                    wg.t_cursor = wg.t_arm + cfg.flag_check_cycles
-                    self._push(wg.t_cursor, wg_id)
+                    c.blocked_on = None
+                    c.flag_idx += 1
+                    c.t_cursor = c.t_arm + cfg.flag_check_cycles
+                    self._push(c.t_cursor, c.idx)
                     continue
-                groups.setdefault((wake_c, wg.program.cu), []).append(wg_id)
+                groups.setdefault((wake_c, c.program.cu), []).append(wg_id)
             for (wake_c, _cu), members in sorted(groups.items()):
                 n_reads = math.ceil(len(members) / max(1, cfg.wake_coalesce_width))
                 self.memory.bulk_reads(n_reads, bytes_each=8, flag=True)
                 for wg_id in members:
-                    wg = self.wgs[wg_id]
-                    wg.in_mwait = False
+                    c = self.cohorts[self._by_wg[wg_id]]
+                    c.in_mwait = False
                     self._armed.pop(wg_id, None)
                     # close the descheduled segment
-                    if wg.desched_segments and wg.desched_segments[-1][1] == -1:
-                        st = wg.desched_segments[-1][0]
-                        wg.desched_segments[-1] = (st, wake_c)
-                    jitter = wg.program.wg % max(1, cfg.requeue_jitter_mod)
+                    if c.desched_segments and c.desched_segments[-1][1] == -1:
+                        st = c.desched_segments[-1][0]
+                        c.desched_segments[-1] = (st, wake_c)
+                    jitter = c.program.wg % max(1, cfg.requeue_jitter_mod)
                     resume = wake_c + jitter
                     # the coalesced validation read observed the blocking flag;
                     # if it is (now) set, advance past it without another read
-                    addr = wg.blocked_on
+                    addr = c.blocked_on
                     set_c = self.flag_set_cycle.get(addr)
                     if set_c is not None and set_c <= resume:
-                        wg.flag_idx += 1
-                    wg.blocked_on = None
-                    wg.t_cursor = resume + cfg.flag_check_cycles
-                    self._push(wg.t_cursor, wg.program.wg)
+                        c.flag_idx += 1
+                    c.blocked_on = None
+                    c.t_cursor = resume + cfg.flag_check_cycles
+                    self._push(c.t_cursor, c.idx)
 
     # ------------------------------------------------------------------
     # results
@@ -392,17 +490,27 @@ class TargetDevice:
     def collect_segments(self) -> List[Segment]:
         segs: List[Segment] = []
         ns = self.cfg.cycles_to_ns
-        for wg in self.wgs:
-            segs.extend(wg.segments)
-            for st, en in wg.desched_segments:
-                if en >= st >= 0:
+        for c in self.cohorts:
+            for wg in c.members:
+                for phase, st, en in c.segments:
                     segs.append(
                         Segment(
-                            wg=wg.program.wg,
-                            phase="descheduled",
+                            wg=wg,
+                            phase=phase,
                             start_ns=ns(st),
                             end_ns=ns(en),
                             device=self.device_id,
                         )
                     )
+                for st, en in c.desched_segments:
+                    if en >= st >= 0:
+                        segs.append(
+                            Segment(
+                                wg=wg,
+                                phase="descheduled",
+                                start_ns=ns(st),
+                                end_ns=ns(en),
+                                device=self.device_id,
+                            )
+                        )
         return sorted(segs, key=lambda s: (s.wg, s.start_ns))

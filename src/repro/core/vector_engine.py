@@ -59,21 +59,31 @@ def run_vectorized(sim) -> "Report":  # noqa: F821 - avoids circular import
 
     writes = _effective_writes(sim)
 
-    # flag visibility cycles: first write to each flag address wins
-    flag_T: Dict[int, int] = {}
+    # Flag visibility cycles: first write to each (src_device, slot) wins.
+    # Resolution uses amap.decode_flag — O(1) per write and covering EVERY
+    # flag slot — rather than comparing against the slot-0 addresses only:
+    # a multi-slot trace bundle (ring steps, pipeline microbatches) would be
+    # invisible to a slot-0 linear scan and the run misreported as a
+    # "no flag writes" deadlock even though the bundle is full of flags.
+    flag_T: Dict[tuple, int] = {}
     for w in sorted(writes, key=lambda w: (w.wakeup_ns, w.seq)):
-        peer = None
-        for g in range(1, cfg.n_devices):
-            if w.addr == sim.amap.flag_addr(g):
-                peer = g
-                break
-        if peer is not None and peer not in flag_T:
-            flag_T[peer] = cfg.ns_to_cycles(w.wakeup_ns)
-    missing = [g for g in order if g not in flag_T]
+        decoded = sim.amap.decode_flag(w.addr)
+        if decoded is not None and decoded not in flag_T:
+            flag_T[decoded] = cfg.ns_to_cycles(w.wakeup_ns)
+    # the gemv workload polls each peer's slot-0 flag, in flag_order()
+    missing = [g for g in order if (g, 0) not in flag_T]
     if missing:
         from .target import EidolaDeadlock
 
-        raise EidolaDeadlock(f"no flag writes for peers {missing} in trace")
+        have = sorted(flag_T)
+        raise EidolaDeadlock(
+            f"no slot-0 flag writes for peers {missing} in trace"
+            + (
+                f" (bundle carries flags for (src, slot) {have})"
+                if have
+                else ""
+            )
+        )
 
     # --- per-WG static schedule (perturbable) -------------------------------
     def dur(wg_i: int, state: str, base: int) -> int:
@@ -120,7 +130,7 @@ def run_vectorized(sim) -> "Report":  # noqa: F821 - avoids circular import
     desched: List[Tuple[int, int, int]] = []  # (wg, t_arm, wake_c)
 
     for g in order:
-        T = flag_T[g]
+        T = flag_T[(g, 0)]
         already = T <= c
         if cfg.sync == SyncPolicy.SPIN:
             nticks = np.where(

@@ -5,7 +5,8 @@ queue of registered writes sorted by ``wakeupTime``.  The detailed engine polls
 the head every simulated cycle; when current time reaches the head's wakeup
 time, *all* entries sharing that timestamp are popped and enacted as xGMI
 writes.  Registration order is arbitrary; pops are strictly chronological with
-registration order (``seq``) as a deterministic tie-break.
+this table's own registration counter as a deterministic tie-break (write
+``seq`` numbers are producer-local and may collide across producers).
 
 Timestamps are registered in nanoseconds (as in the pseudo-op) and converted to
 cycles with the device clock, exactly as the paper describes ("these timestamps
@@ -16,8 +17,9 @@ gem5 configuration").
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Iterable, List, Optional, Tuple
+import itertools
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
 
 from .events import RegisteredWrite, TraceBundle
 
@@ -39,9 +41,22 @@ class WriteTrackingTable:
         if clock_ghz <= 0:
             raise ValueError("clock_ghz must be positive")
         self.clock_ghz = float(clock_ghz)
-        # heap entries: (wakeup_cycle, seq, RegisteredWrite)
+        # Heap entries: (wakeup_cycle, registration_no, RegisteredWrite).
+        # The tie-break is this table's OWN monotonic registration counter,
+        # not the write's ``seq``: seqs are only unique within one producer
+        # (trace bundles and a Cluster's emission counter both start at 0),
+        # so a warm-started closed loop can hold two same-cycle writes with
+        # equal seqs — and RegisteredWrite is unorderable, which would make
+        # heapq fall through to comparing the writes and raise TypeError.
+        # For every single-producer table (all pre-cohort callers) writes are
+        # registered in seq order, so pop order is unchanged.
         self._heap: List[Tuple[int, int, RegisteredWrite]] = []
+        self._reg_no = itertools.count()
         self.stats = WTTStats()
+        # Optional engine hook: called with the wakeup cycle of every newly
+        # registered write, so a global event calendar can track cross-device
+        # registrations without rescanning each table per event.
+        self.on_register: Optional[Callable[[int], None]] = None
 
     # -- time conversion -----------------------------------------------------
 
@@ -55,9 +70,11 @@ class WriteTrackingTable:
 
     def register(self, write: RegisteredWrite) -> None:
         cyc = self.ns_to_cycles(write.wakeup_ns)
-        heapq.heappush(self._heap, (cyc, write.seq, write))
+        heapq.heappush(self._heap, (cyc, next(self._reg_no), write))
         self.stats.registered += 1
         self.stats.max_pending = max(self.stats.max_pending, len(self._heap))
+        if self.on_register is not None:
+            self.on_register(cyc)
 
     def register_bundle(self, bundle: TraceBundle) -> None:
         for w in bundle:

@@ -19,10 +19,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-try:
-    from jax import shard_map
-except ImportError:  # jax < 0.5: experimental namespace
-    from jax.experimental.shard_map import shard_map
+
+from .compat import SHARD_MAP_NO_CHECK, axis_size, pvary, shard_map
 
 __all__ = [
     "psum_matmul",
@@ -50,7 +48,7 @@ def psum_matmul(mesh: Mesh, axis: str = "model"):
         mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(None, None),
-        check_vma=False,
+        **SHARD_MAP_NO_CHECK,
     )
 
 
@@ -69,7 +67,7 @@ def fused_gemv_allreduce(mesh: Mesh, axis: str = "model"):
     Numerically identical to ``psum_matmul`` (tested).
     """
     def inner(x, w):
-        n_dev = jax.lax.axis_size(axis)
+        n_dev = axis_size(axis)
         idx = jax.lax.axis_index(axis)
         B = x.shape[0]
 
@@ -95,7 +93,7 @@ def fused_gemv_allreduce(mesh: Mesh, axis: str = "model"):
             recv = jax.lax.ppermute(buf, axis, perm)
             return (recv, yt_local), None
 
-        zero = jax.lax.pvary(jnp.zeros((B, tile), y.dtype), (axis,))
+        zero = pvary(jnp.zeros((B, tile), y.dtype), (axis,))
         (acc, _), _ = jax.lax.scan(
             step, (zero, yt), jnp.arange(n_dev - 1)
         )
@@ -110,7 +108,7 @@ def fused_gemv_allreduce(mesh: Mesh, axis: str = "model"):
         mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(None, None),
-        check_vma=False,
+        **SHARD_MAP_NO_CHECK,
     )
 
 
@@ -123,7 +121,7 @@ def ring_allreduce(mesh: Mesh, axis: str):
     """Bidirectional-naive ring all-reduce of a replicated-shape buffer."""
 
     def inner(x):
-        n_dev = jax.lax.axis_size(axis)
+        n_dev = axis_size(axis)
         perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
 
         def step(acc_x, _):
@@ -134,7 +132,7 @@ def ring_allreduce(mesh: Mesh, axis: str):
         (acc, _), _ = jax.lax.scan(step, (x, x), None, length=n_dev - 1)
         return acc
 
-    return shard_map(inner, mesh=mesh, in_specs=P(axis), out_specs=P(axis), check_vma=False)
+    return shard_map(inner, mesh=mesh, in_specs=P(axis), out_specs=P(axis), **SHARD_MAP_NO_CHECK)
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +177,7 @@ def overlap_grad_allreduce(mesh: Mesh, axis: str = "data", *, compress: bool = F
 
             return shard_map(
                 inner, mesh=mesh, in_specs=P(*(None,) * g.ndim),
-                out_specs=P(*(None,) * g.ndim), check_vma=False,
+                out_specs=P(*(None,) * g.ndim), **SHARD_MAP_NO_CHECK,
             )(g)
 
         return jax.tree.map(red, grads)

@@ -1,0 +1,72 @@
+"""jax version portability shims for the shard_map-based modules.
+
+The training/serving substrate targets both the jax baked into this image
+(0.4.x) and current releases:
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to the top level;
+* its replication-check keyword was renamed ``check_rep`` -> ``check_vma``
+  (our all-to-all bodies do not satisfy it, so it is always disabled);
+* ``jax.lax.axis_size`` appeared in 0.5 — ``psum(1, axis)`` is the portable
+  spelling.
+* 0.4's non-partitionable threefry makes ``jit(init, out_shardings=...)``
+  produce *different parameter values per mesh shape*; call
+  :func:`require_sharding_invariant_rng` from entry points whose contract is
+  mesh-shape determinism (the trainer does) — deliberately NOT an import
+  side effect here, so merely importing a shard_map helper never changes a
+  host application's RNG stream.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def require_sharding_invariant_rng() -> None:
+    """Force partitionable threefry (sharding-invariant random values).
+
+    On jax >= 0.5 this is the default (and eventually the only) behaviour;
+    on 0.4 the legacy RNG makes sharded param init depend on the mesh shape,
+    which breaks cross-mesh train-step determinism (tested in
+    ``test_sharded_train_step_matches_single_device``).
+    """
+    jax.config.update("jax_threefry_partitionable", True)
+
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+__all__ = [
+    "shard_map",
+    "SHARD_MAP_NO_CHECK",
+    "axis_size",
+    "pvary",
+    "require_sharding_invariant_rng",
+]
+
+# kwargs that disable shard_map's replicated-collective check on this jax
+SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False}
+)
+
+
+def axis_size(name: str):
+    """Size of a named mesh axis, from inside a shard_map body."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def pvary(x, axes):
+    """Mark ``x`` as varying over ``axes`` (vma typing, jax >= 0.5).
+
+    On older jax there is no varying-manual-axes type system, so the marker
+    is an identity."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    return x

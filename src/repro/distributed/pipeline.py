@@ -24,11 +24,9 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-try:
-    from jax import shard_map
-except ImportError:  # jax < 0.5: experimental namespace
-    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from .compat import SHARD_MAP_NO_CHECK, shard_map
 
 __all__ = ["pipeline_apply", "bubble_fraction", "stack_stage_params"]
 
@@ -122,5 +120,5 @@ def pipeline_apply(
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        **SHARD_MAP_NO_CHECK,
     )

@@ -355,10 +355,16 @@ def attention_decode(
             valid = jnp.arange(S)[None, :] <= pos
             s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
             w = jax.nn.softmax(s, axis=-1)
+            # accumulate the attention output in fp32 (matching the forward
+            # path's chunked accumulator) before casting back for w_o
             o_lat = jnp.einsum(
-                "bhqs,bsr->bqhr", w.astype(cache["c_kv"].dtype), cache["c_kv"]
+                "bhqs,bsr->bqhr", w.astype(cache["c_kv"].dtype), cache["c_kv"],
+                preferred_element_type=jnp.float32,
             )
-            o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+            o = jnp.einsum(
+                "bqhr,rhd->bqhd", o_lat, w_uv,
+                preferred_element_type=jnp.float32,
+            ).astype(q.dtype)
             y = o.reshape(B, 1, -1) @ p["w_o"]
             return y, cache
         k_nope = (cache["c_kv"] @ p["w_uk"]).reshape(B, S, cfg.n_heads, hd)
@@ -390,6 +396,11 @@ def attention_decode(
     s = jnp.einsum("bqgrd,bsgd->bgrqs", qh, k, preferred_element_type=jnp.float32)
     s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bgrqs,bsgd->bqgrd", w.astype(v.dtype), v)
+    # fp32 accumulation to mirror _chunked_attention's running fp32 output
+    # (the forward path); cast back to the activation dtype before w_o
+    o = jnp.einsum(
+        "bgrqs,bsgd->bqgrd", w.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
     y = o.reshape(B, 1, -1) @ p["w_o"]
     return y, cache

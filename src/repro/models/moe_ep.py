@@ -31,11 +31,9 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-try:
-    from jax import shard_map
-except ImportError:  # jax < 0.5: experimental namespace
-    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.compat import SHARD_MAP_NO_CHECK, axis_size, shard_map
 
 from .common import ModelConfig
 
@@ -105,7 +103,7 @@ def _ep_scatter_body(cfg: ModelConfig, reduce_axes, ff_axis, p, x_blk):
         p["w_gate"] = jax.lax.all_gather(p["w_gate"], ff_axis, axis=2, tiled=True)
         p["w_up"] = jax.lax.all_gather(p["w_up"], ff_axis, axis=2, tiled=True)
         p["w_down"] = jax.lax.all_gather(p["w_down"], ff_axis, axis=1, tiled=True)
-    msz = jax.lax.axis_size("model")
+    msz = axis_size("model")
     midx = jax.lax.axis_index("model")
     E_loc = cfg.n_experts // msz
     k = cfg.experts_per_token
@@ -173,7 +171,7 @@ def _ep_scatter_body(cfg: ModelConfig, reduce_axes, ff_axis, p, x_blk):
 
 def _ep_gather_body(cfg: ModelConfig, reduce_axes, ff_axis, p, x_blk):
     B_loc, S, d = x_blk.shape
-    msz = jax.lax.axis_size("model")
+    msz = axis_size("model")
     midx = jax.lax.axis_index("model")
     E_loc = cfg.n_experts // msz
     k = cfg.experts_per_token
@@ -257,7 +255,7 @@ def moe_apply_ep(
         mesh=mesh,
         in_specs=(param_specs, x_spec),
         out_specs=(x_spec, P(None)),
-        check_vma=False,
+        **SHARD_MAP_NO_CHECK,
     )
     y, aux = fn(p_used, x)
     return y, {

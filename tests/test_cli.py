@@ -4,6 +4,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# model-forward-dominated: runs in the separate slow CI job, not the fast
+# simulator suite
+pytestmark = pytest.mark.slow
+
 REPO = os.path.join(os.path.dirname(__file__), "..")
 SRC = os.path.join(REPO, "src")
 

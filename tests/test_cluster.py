@@ -334,3 +334,136 @@ def test_sweep_runner_devices_axis():
     assert [p.overrides["n_egpus"] for p in points] == [1, 3]
     spans = [p.report.kernel_span_ns for p in points]
     assert spans[1] > spans[0]  # more ring steps -> longer kernel
+
+
+# ---------------------------------------------------------------------------
+# cohort interpreter equivalence (the perf tentpole must not change physics)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", CLOSED_LOOP)
+def test_cohort_interpreter_matches_singleton_interpreter(name):
+    """The cohort-batched interpreter must be bit-identical to the
+    per-workgroup (singleton) interpreter: same traffic, same per-device
+    breakdown, same timeline segments."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    reports = {}
+    for cohorts in (True, False):
+        sc = get_scenario(name)(cfg, closed_loop=True)
+        reports[cohorts] = Cluster(cfg, sc, cohorts=cohorts).run()
+    a, b = reports[True], reports[False]
+    assert a.traffic == b.traffic
+    assert a.per_device == b.per_device
+    assert a.kernel_span_ns == pytest.approx(b.kernel_span_ns)
+    assert a.sim_cycles == b.sim_cycles
+    assert _segments_key(a) == _segments_key(b)
+
+
+def test_cohorts_group_dispatch_waves():
+    """Workgroups sharing (dispatch cycle, phase program) collapse into one
+    cohort per wave under SPIN; SyncMon falls back to singletons (requeue
+    jitter and CU-keyed wake coalescing are per-workgroup)."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
+    cluster = Cluster(cfg, sc)
+    dev = cluster.nodes[0].target
+    assert dev.n_wgs == cfg.workgroups
+    assert len(dev.cohorts) == cfg.workgroups // cfg.n_cus  # one per wave
+    assert all(c.count == cfg.n_cus for c in dev.cohorts)
+    # members of one cohort are consecutive (emission order preservation)
+    for c in dev.cohorts:
+        assert list(c.members) == list(range(c.members[0], c.members[-1] + 1))
+
+    syncmon = FAST.with_(engine=EngineKind.EVENT, sync=SyncPolicy.SYNCMON)
+    sc2 = get_scenario("ring_allreduce")(syncmon, closed_loop=True)
+    dev2 = Cluster(syncmon, sc2).nodes[0].target
+    assert len(dev2.cohorts) == syncmon.workgroups  # singletons
+
+
+# ---------------------------------------------------------------------------
+# WTT tie-break: seeded traces + emitted writes sharing a wakeup cycle
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_traces_into_closed_loop_cluster_share_wakeup_cycle():
+    """Regression: a warm-started closed loop used to crash in heapq.
+
+    WTT heap entries were (cycle, seq, RegisteredWrite) with the unorderable
+    RegisteredWrite as the final element; trace-bundle seqs and the cluster's
+    emission seqs both start at 0, so a seeded write and an emitted write
+    sharing a wakeup cycle compared the frozen dataclasses and raised
+    TypeError.  The WTT's own registration counter now breaks ties.
+    """
+    cfg = FAST.with_(engine=EngineKind.EVENT, include_data_writes=False)
+
+    # discover the first emitted flag's arrival cycle at device 1 (seq 0 in
+    # the cluster's emission order: src 0 -> dst 1, ring step 0)
+    probe = Cluster(cfg, RingAllReduceScenario(cfg, closed_loop=True))
+    probe.run()
+    arrivals = probe.nodes[1].target.flag_set_cycle
+    first_cycle = min(arrivals.values())
+
+    class SeededRing(RingAllReduceScenario):
+        """Closed-loop ring whose device 1 is warm-started with one write
+        timed to land exactly on the first emitted flag's wakeup cycle."""
+
+        name = "ring_allreduce"  # same registry key; not re-registered
+
+        def traces_for(self, device):
+            bundle = super().traces_for(device)
+            if device == 1:
+                # Cluster adds xgmi_enact_latency_ns to seeded writes, so
+                # subtract it to hit first_cycle exactly; seq stays 0 — the
+                # collision with the first emitted write's seq.
+                bundle.add(
+                    wakeup_ns=self.cfg.cycles_to_ns(first_cycle)
+                    - self.cfg.xgmi_enact_latency_ns,
+                    addr=self.amap.partial_base,
+                    data=0xAB,
+                    size=8,
+                    src=3,
+                )
+            return bundle
+
+    sc = SeededRing(cfg, closed_loop=True)
+    cluster = Cluster(cfg, sc)
+    report = cluster.run()  # pre-fix: TypeError from heapq on registration
+    # the seeded write was enacted on top of the normal closed-loop traffic
+    assert report.per_device[1]["xgmi_writes_in"] == (
+        report.per_device[0]["xgmi_writes_in"] + 1
+    )
+    assert cluster.nodes[1].wtt.empty
+
+    # pop order at the shared cycle follows registration order: seeds first
+    wtt = cluster.nodes[1].wtt
+    assert wtt.stats.registered == sc.steps + 1
+
+
+def test_precomputed_traffic_deltas_mirror_trafficop_apply():
+    """The cohort hot path accounts traffic from per-spec precomputed deltas;
+    TrafficOp.apply(memory, times=n) is the reference implementation.  Pin
+    the two together so they cannot drift."""
+    from repro.core.memory import DirectoryMemory
+
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
+    dev = Cluster(cfg, sc).nodes[0].target
+    specs_by_id = {
+        id(spec): spec for c in dev.cohorts for spec in c.phases
+    }
+    checked = 0
+    for key, delta in dev._tdelta.items():
+        spec = specs_by_id[key]
+        if delta is None:
+            assert not spec.traffic
+            continue
+        mem = DirectoryMemory(sc.amap)
+        for op in spec.traffic:
+            op.apply(mem, times=3)
+        t = mem.traffic
+        assert (
+            t.nonflag_reads, t.read_bytes, t.local_writes,
+            t.write_bytes, t.xgmi_writes_out, t.xgmi_bytes_out,
+        ) == tuple(3 * d for d in delta)
+        checked += 1
+    assert checked > 0

@@ -11,6 +11,10 @@ import sys
 
 import pytest
 
+# model-forward-dominated: runs in the separate slow CI job, not the fast
+# simulator suite
+pytestmark = pytest.mark.slow
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -52,6 +56,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.models.common import ModelConfig, materialize
 from repro.models.moe import moe_apply, moe_specs
 from repro.models.moe_ep import moe_apply_ep
+
 cfg = ModelConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=48,
                   vocab=64, n_experts=8, experts_per_token=2,
                   n_shared_experts=1, capacity_factor=4.0,
@@ -170,13 +175,13 @@ def test_compressed_psum_accuracy():
     run_devices(
         """
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import compressed_psum
+from repro.distributed.compat import SHARD_MAP_NO_CHECK, shard_map
 mesh = jax.make_mesh((8,), ("data",))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 64), jnp.float32)
 fn = shard_map(lambda x: compressed_psum(x, "data"), mesh=mesh,
-               in_specs=P("data"), out_specs=P("data"), check_vma=False)
+               in_specs=P("data"), out_specs=P("data"), **SHARD_MAP_NO_CHECK)
 out = jax.jit(fn)(g)
 exact = np.broadcast_to(np.asarray(g).sum(0, keepdims=True), (8, 64))
 # int8 quantization bound: n_shards * max|g| / 127 (elementwise absolute)

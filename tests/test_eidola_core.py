@@ -247,3 +247,78 @@ def test_write_size_validation():
         RegisteredWrite(wakeup_ns=0.0, addr=0, data=0, size=16)
     with pytest.raises(ValueError):
         RegisteredWrite(wakeup_ns=-1.0, addr=0, data=0)
+
+
+# ---------------------------------------------------------------------------
+# vector engine: multi-slot trace bundles (flag resolution via decode_flag)
+# ---------------------------------------------------------------------------
+
+
+def _multi_slot_setup():
+    """Gemv scenario on a multi-slot AddressMap, trace carrying the slot-0
+    peer flags PLUS extra flag writes in higher slots (ring-style bundles
+    replayed on a shared symmetric-heap layout look exactly like this)."""
+    from repro.core.scenarios.gemv_allreduce import GemvAllReduceScenario
+
+    cfg = SimConfig()
+    amap = AddressMap(n_devices=cfg.n_devices, flag_slots=4)
+    sc = GemvAllReduceScenario(cfg, amap, flag_delays_ns=9_000.0)
+    bundle = sc.traces()
+    for g in range(1, cfg.n_devices):
+        for slot in (1, 3):
+            bundle.add(
+                wakeup_ns=2_000.0 * g + 100.0 * slot,
+                addr=amap.flag_addr(g, slot=slot),
+                data=1,
+                size=8,
+                src=g,
+            )
+    return cfg, sc, bundle
+
+
+def test_vector_engine_sees_multi_slot_flag_writes():
+    """Regression: flag resolution linear-scanned amap.flag_addr(g) slot 0
+    only; the higher-slot flag writes of a multi-slot bundle were invisible.
+    decode_flag-based resolution (O(1), all slots) must keep the vector
+    engine bit-identical to the event engine on such bundles."""
+    cfg, sc, bundle = _multi_slot_setup()
+    reports = {}
+    for eng in (EngineKind.EVENT, EngineKind.VECTOR):
+        from repro.core.scenarios.gemv_allreduce import GemvAllReduceScenario
+
+        sc_run = GemvAllReduceScenario(
+            cfg.with_(engine=eng), sc.amap, flag_delays_ns=9_000.0
+        )
+        reports[eng] = Eidola(
+            cfg.with_(engine=eng), bundle, scenario=sc_run,
+            collect_segments=False,
+        ).run()
+    a, b = reports[EngineKind.EVENT], reports[EngineKind.VECTOR]
+    assert a.traffic == b.traffic
+    assert a.flag_reads == b.flag_reads
+    assert b.wtt_enacted == len(bundle)  # extra slots enacted, not dropped
+
+
+def test_vector_engine_missing_slot0_flags_names_available_slots():
+    """A bundle whose flags all sit in slots > 0 deadlocks the gemv waits
+    (they poll slot 0) — but the report must name the flags the bundle DOES
+    carry instead of claiming there are no flag writes at all."""
+    from repro.core.scenarios.gemv_allreduce import GemvAllReduceScenario
+
+    cfg = SimConfig(engine=EngineKind.VECTOR)
+    amap = AddressMap(n_devices=cfg.n_devices, flag_slots=4)
+    sc = GemvAllReduceScenario(cfg, amap, flag_delays_ns=9_000.0)
+    bundle = TraceBundle()
+    for g in range(1, cfg.n_devices):
+        bundle.add(
+            wakeup_ns=2_000.0 * g,
+            addr=amap.flag_addr(g, slot=2),
+            data=1,
+            size=8,
+            src=g,
+        )
+    with pytest.raises(EidolaDeadlock) as ei:
+        Eidola(cfg, bundle, scenario=sc, collect_segments=False).run()
+    msg = str(ei.value)
+    assert "slot-0" in msg
+    assert "(1, 2)" in msg  # the bundle's actual (src, slot) flags are named

@@ -24,6 +24,10 @@ from repro.optim import AdamWConfig
 from repro.serving import ServeConfig, ServeEngine
 from repro.training import TrainConfig, Trainer
 
+# model-forward-dominated: runs in the separate slow CI job, not the fast
+# simulator suite
+pytestmark = pytest.mark.slow
+
 
 def tiny_model():
     return Model(
