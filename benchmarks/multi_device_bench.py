@@ -1,17 +1,21 @@
 """Closed-loop multi-device scaling benchmark — the perf trajectory seed.
 
 Sweeps device counts on the event engine for every closed-loop-capable
-scenario and records simulated span, aggregate traffic, and wall time, so
+scenario — each count in the flat single-tier shape AND a tiered
+intra/inter-node shape (``devices_per_node`` = 2 below 16 devices, 4 from 16
+up) — and records simulated span, aggregate traffic, and wall time, so
 future performance PRs have a multi-device baseline to compare against
 (`BENCH_multi_device.json`).  A cross-engine spot check at the smallest
-device count guards the cycle/event bit-identity on every benchmark run.
+device count (both shapes) guards the cycle/event bit-identity on every
+benchmark run.
 
 ``--check BASELINE.json`` turns the run into a regression guard: for every
-row that also exists in the baseline (same scenario/devices/engine/sync/
-workgroups) the traffic counters must match bit-for-bit and wall time must
-not regress beyond ``--wall-factor`` (default 2x) — counters drifting means
-the simulation physics changed, wall regressing means someone broke the
-cohort interpreter or the event calendar.
+row that also exists in the baseline (same scenario/devices/devices_per_node/
+engine/sync/workgroups; rows predating the tiered fabric count as flat) the
+traffic counters must match bit-for-bit and wall time must not regress
+beyond ``--wall-factor`` (default 2x) — counters drifting means the
+simulation physics changed, wall regressing means someone broke the cohort
+interpreter, the event calendar, or the tiered router.
 
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
      [--quick] [--devices 4,8,...] [--repeats N]
@@ -27,7 +31,12 @@ import os
 import sys
 
 
-CLOSED_LOOP_SCENARIOS = ("ring_allreduce", "all_to_all", "pipeline_p2p")
+CLOSED_LOOP_SCENARIOS = (
+    "ring_allreduce",
+    "all_to_all",
+    "pipeline_p2p",
+    "hierarchical_allreduce",
+)
 
 # the simulation-physics outputs that must never drift between runs
 COUNTER_KEYS = (
@@ -40,10 +49,20 @@ COUNTER_KEYS = (
 )
 
 
+def tiered_dpn(devices: int) -> int:
+    """The benchmark's tiered shape for one device count: 2-device nodes
+    below 16 devices (so 4- and 8-device CI rows still split), 4-device
+    nodes from 16 up."""
+    return 2 if devices < 16 else 4
+
+
 def _row_key(row: dict) -> tuple:
     return (
         row["scenario"],
         row["devices"],
+        # rows written before the tiered fabric carry no shape field; they
+        # were flat by construction
+        row.get("devices_per_node"),
         row["engine"],
         row["sync"],
         row["workgroups"],
@@ -69,16 +88,17 @@ def check_against_baseline(
         if base is None:
             continue
         matched += 1
+        where = (
+            f"{row['scenario']} devices={row['devices']} "
+            f"dpn={row.get('devices_per_node')}"
+        )
         for k in COUNTER_KEYS:
             if row[k] != base[k]:
-                failures.append(
-                    f"{row['scenario']} devices={row['devices']}: {k} drifted "
-                    f"{base[k]} -> {row[k]}"
-                )
+                failures.append(f"{where}: {k} drifted {base[k]} -> {row[k]}")
         if row["wall_time_s"] > wall_factor * base["wall_time_s"] + wall_grace_s:
             failures.append(
-                f"{row['scenario']} devices={row['devices']}: wall time "
-                f"regressed {base['wall_time_s'] * 1e3:.1f} ms -> "
+                f"{where}: wall time regressed "
+                f"{base['wall_time_s'] * 1e3:.1f} ms -> "
                 f"{row['wall_time_s'] * 1e3:.1f} ms (> {wall_factor:g}x)"
             )
     if not matched:
@@ -93,7 +113,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny config + small device counts (CI smoke)")
-    ap.add_argument("--out", default="BENCH_multi_device.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_multi_device.json for "
+                         "a baseline-regeneration run; guard runs with "
+                         "--check write nothing unless --out is given, so "
+                         "checking never clobbers the committed baseline "
+                         "with a partial sweep)")
     ap.add_argument("--devices", default=None,
                     help="comma-separated device counts "
                          "(default 4,8,16,32,64,128,256)")
@@ -122,53 +147,76 @@ def main() -> None:
     )
 
     rows = []
-    print(f"{'scenario':16s} {'devices':>7s} {'span_ns':>12s} "
+    print(f"{'scenario':22s} {'devices':>7s} {'dpn':>4s} {'span_ns':>12s} "
           f"{'flag_reads':>11s} {'wtt_enacted':>11s} {'wall_ms':>9s}")
     for name in CLOSED_LOOP_SCENARIOS:
         for nd in device_counts:
-            best = None
-            for _ in range(max(1, args.repeats)):
-                r = simulate(name, base, devices=nd, closed_loop=True,
-                             collect_segments=False)
-                row = {
-                    "scenario": name,
-                    "devices": nd,
-                    "engine": r.engine,
-                    "sync": r.sync,
-                    "workgroups": base.workgroups,
-                    "flag_reads": r.flag_reads,
-                    "nonflag_reads": r.nonflag_reads,
-                    "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
-                    "wtt_enacted": r.wtt_enacted,
-                    "kernel_span_ns": r.kernel_span_ns,
-                    "sim_cycles": r.sim_cycles,
-                    "wall_time_s": r.wall_time_s,
-                }
-                if best is not None:
-                    for k in COUNTER_KEYS:
-                        assert row[k] == best[k], (
-                            f"nondeterministic {k}: {row[k]} != {best[k]}"
-                        )
-                if best is None or row["wall_time_s"] < best["wall_time_s"]:
-                    best = row
-            rows.append(best)
-            print(f"{name:16s} {nd:>7d} {best['kernel_span_ns']:>12,.0f} "
-                  f"{best['flag_reads']:>11,} {best['wtt_enacted']:>11,} "
-                  f"{best['wall_time_s'] * 1e3:>9.2f}")
+            for dpn in (None, tiered_dpn(nd)):
+                if dpn is not None and nd % dpn:
+                    continue
+                best = None
+                for _ in range(max(1, args.repeats)):
+                    r = simulate(name, base, devices=nd, closed_loop=True,
+                                 devices_per_node=dpn,
+                                 collect_segments=False)
+                    row = {
+                        "scenario": name,
+                        "devices": nd,
+                        "devices_per_node": dpn,
+                        "engine": r.engine,
+                        "sync": r.sync,
+                        "workgroups": base.workgroups,
+                        "flag_reads": r.flag_reads,
+                        "nonflag_reads": r.nonflag_reads,
+                        "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
+                        "wtt_enacted": r.wtt_enacted,
+                        "kernel_span_ns": r.kernel_span_ns,
+                        "sim_cycles": r.sim_cycles,
+                        "wall_time_s": r.wall_time_s,
+                    }
+                    if best is not None:
+                        for k in COUNTER_KEYS:
+                            assert row[k] == best[k], (
+                                f"nondeterministic {k}: {row[k]} != {best[k]}"
+                            )
+                    if best is None or row["wall_time_s"] < best["wall_time_s"]:
+                        best = row
+                rows.append(best)
+                print(f"{name:22s} {nd:>7d} {dpn or '-':>4} "
+                      f"{best['kernel_span_ns']:>12,.0f} "
+                      f"{best['flag_reads']:>11,} {best['wtt_enacted']:>11,} "
+                      f"{best['wall_time_s'] * 1e3:>9.2f}")
 
-    # cross-engine spot check at the smallest device count: the cycle and
-    # event engines must stay bit-identical in the closed loop
+    # cross-engine spot check at the smallest device count, in both the flat
+    # and the tiered shape: the cycle and event engines must stay
+    # bit-identical in the closed loop.  The cycle engine steps every cycle,
+    # so the check is only practical at small counts — a large-count-only
+    # invocation (baseline regeneration in chunks) skips it and relies on the
+    # small-count runs for the identity guard.
     agree = True
-    nd = device_counts[0]
-    for name in CLOSED_LOOP_SCENARIOS:
-        pair = {}
-        for eng in (EngineKind.CYCLE, EngineKind.EVENT):
-            r = simulate(name, base.with_(engine=eng), devices=nd,
-                         closed_loop=True, collect_segments=False)
-            pair[eng.value] = (r.flag_reads, r.nonflag_reads, r.kernel_span_ns)
-        if pair["cycle"] != pair["event"]:
-            agree = False
-            print(f"[bench] ENGINE MISMATCH {name} devices={nd}: {pair}")
+    nd = min(device_counts)
+    if nd > 32:
+        print(f"[bench] cross-engine spot check skipped (smallest count "
+              f"{nd} > 32; cycle engine impractical)")
+        spot_scenarios = ()
+    else:
+        spot_scenarios = CLOSED_LOOP_SCENARIOS
+    for name in spot_scenarios:
+        for dpn in (None, tiered_dpn(nd)):
+            if dpn is not None and nd % dpn:
+                continue
+            pair = {}
+            for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+                r = simulate(name, base.with_(engine=eng), devices=nd,
+                             closed_loop=True, devices_per_node=dpn,
+                             collect_segments=False)
+                pair[eng.value] = (
+                    r.flag_reads, r.nonflag_reads, r.kernel_span_ns
+                )
+            if pair["cycle"] != pair["event"]:
+                agree = False
+                print(f"[bench] ENGINE MISMATCH {name} devices={nd} "
+                      f"dpn={dpn}: {pair}")
     print(f"[bench] multi_device {'PASS' if agree else 'FAIL'} "
           f"({len(rows)} rows)")
 
@@ -182,12 +230,18 @@ def main() -> None:
         print(f"[bench] baseline check "
               f"{'PASS' if not failures else 'FAIL'} vs {args.check}")
 
-    out_dir = os.path.dirname(args.out)
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump({"rows": rows, "engines_agree": agree}, f, indent=1)
-    print(f"[bench] wrote {args.out}")
+    out = args.out
+    if out is None:
+        out = None if args.check else "BENCH_multi_device.json"
+    if out is not None:
+        out_dir = os.path.dirname(out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"rows": rows, "engines_agree": agree}, f, indent=1)
+        print(f"[bench] wrote {out}")
+    else:
+        print("[bench] no --out given on a --check run; nothing written")
     if not agree or failures:
         sys.exit(1)
 

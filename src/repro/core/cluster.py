@@ -37,7 +37,7 @@ from .memory import DirectoryMemory
 from .monitor import MonitorLog
 from .scenario import EmitOp, PhaseSpec, Scenario
 from .target import TargetDevice
-from .topology import V5E, FabricModel
+from .topology import V5E, FabricModel, Topology
 from .wtt import WriteTrackingTable
 
 __all__ = ["Cluster", "ClusterNode"]
@@ -69,6 +69,13 @@ class Cluster:
     note phase jitter is then *correlated* across devices because it is keyed
     by (wg, phase) only) or a mapping ``{device_id: perturb}`` to disturb
     specific ranks — the knob the propagation experiments turn.
+
+    The fabric is derived from the scenario's :class:`Topology` (its
+    ``topology`` attribute, or an explicit ``topology=`` argument): non-DCI
+    axes form the intra-node tier, DCI axes the inter-node tier.  Without a
+    topology the fabric degenerates to the flat single-tier ring over
+    ``cfg.n_devices`` (the pre-tiered behaviour); ``fabric=`` overrides
+    everything.
     """
 
     def __init__(
@@ -79,6 +86,7 @@ class Cluster:
         perturb: PerturbLike = None,
         collect_segments: bool = True,
         fabric: Optional[FabricModel] = None,
+        topology: Optional[Topology] = None,
         cohorts: bool = True,
     ):
         self.cfg = cfg.validate()
@@ -86,9 +94,25 @@ class Cluster:
         self.amap = scenario.amap
         self.perturb = perturb
         self.collect_segments = collect_segments
-        self.fabric = fabric or FabricModel(
-            cfg.n_devices, hw=getattr(scenario, "hw", V5E)
-        )
+        topo = topology or getattr(scenario, "topology", None)
+        if fabric is None:
+            if topo is not None:
+                if topo.n_chips != cfg.n_devices:
+                    raise ValueError(
+                        f"topology spans {topo.n_chips} chips but the cluster "
+                        f"simulates {cfg.n_devices} devices"
+                    )
+                fabric = FabricModel.from_topology(topo)
+            else:
+                fabric = FabricModel(
+                    cfg.n_devices, hw=getattr(scenario, "hw", V5E)
+                )
+        elif fabric.n_devices != cfg.n_devices:
+            raise ValueError(
+                f"fabric models {fabric.n_devices} devices but the cluster "
+                f"simulates {cfg.n_devices}"
+            )
+        self.fabric = fabric
         self._seq = itertools.count()
         # (src_device, phase_idx, emit_idx) -> completions seen (coalescing)
         self._emit_counts: Dict[tuple, int] = {}
@@ -158,6 +182,7 @@ class Cluster:
         the same order the per-workgroup interpreter would have).
         """
         n_wgs = self.nodes[src].target.n_wgs
+        fire: List[EmitOp] = []
         for i, op in enumerate(spec.emits):
             if op.coalesce == "last":
                 key = (src, phase_idx, i)
@@ -165,10 +190,13 @@ class Cluster:
                 self._emit_counts[key] = seen
                 if seen < n_wgs:
                     continue
-                self._route(src, op, cycle)
-            else:  # "each"
-                for _ in range(count):
-                    self._route(src, op, cycle)
+                fire.append(op)
+            else:  # "each": one message per represented workgroup
+                fire.extend([op] * count)
+        if len(fire) > 1:
+            self._route_batch(src, fire, cycle)
+        elif fire:
+            self._route(src, fire[0], cycle)
 
     def _route(self, src: int, op: EmitOp, cycle: int) -> None:
         cfg = self.cfg
@@ -179,58 +207,91 @@ class Cluster:
         # the flag write itself is fabric traffic out of the emitting device;
         # payload bytes are accounted by the phase's own TrafficOps
         self.nodes[src].memory.issue_xgmi_out(1, bytes_each=op.size)
-        issue_ns = cfg.cycles_to_ns(cycle)
         arrival_ns = self.fabric.transfer(
-            src, op.dst, op.payload_bytes + op.size, issue_ns
+            src, op.dst, op.payload_bytes + op.size, cfg.cycles_to_ns(cycle)
         )
+        self._register_emit(src, op, arrival_ns, cycle)
+
+    def _route_batch(self, src: int, ops: List[EmitOp], cycle: int) -> None:
+        """Route all of one completion's emissions in a single fabric pass.
+
+        The ``all_to_all`` incast fires O(devices) same-cycle bursts per
+        completing dispatch phase (O(devices^2) per run); pricing them with
+        :meth:`FabricModel.transfer_batch` replaces that many python routing
+        calls with one cumulative sum per egress port, bit-identical to the
+        sequential path (registration order, seqs, and port FIFO order are
+        all preserved).
+        """
+        cfg = self.cfg
+        for op in ops:
+            if op.dst >= cfg.n_devices:
+                raise ValueError(
+                    f"EmitOp.dst {op.dst} out of range for "
+                    f"{cfg.n_devices} devices"
+                )
+        mem = self.nodes[src].memory
+        for op in ops:
+            mem.issue_xgmi_out(1, bytes_each=op.size)
+        arrivals = self.fabric.transfer_batch(
+            src,
+            [op.dst for op in ops],
+            [op.payload_bytes + op.size for op in ops],
+            cfg.cycles_to_ns(cycle),
+        )
+        for op, arrival_ns in zip(ops, arrivals):
+            self._register_emit(src, op, arrival_ns, cycle)
+
+    def _register_emit(
+        self, src: int, op: EmitOp, arrival_ns: float, cycle: int
+    ) -> None:
+        """Register one routed emission (markers + flag) into ``op.dst``,
+        enforcing causality: a write emitted at ``cycle`` can never become
+        visible in the same cycle (jitter perturbations could otherwise pull
+        it into the past, which the two engines would order differently).
+        """
+        cfg = self.cfg
         arrival_ns += cfg.xgmi_enact_latency_ns
         addr = op.addr if op.addr is not None else self.amap.flag_addr(src, op.slot)
+        # per-destination constants hoisted out of the marker loop (the
+        # all_to_all incast registers O(devices^2) marker writes per run)
+        p = self._perturb_for(op.dst)
+        min_ns = cfg.cycles_to_ns(cycle + 1)
+        register = self.nodes[op.dst].wtt.register
+        seq = self._seq
         if cfg.include_data_writes and op.data_writes > 0:
             lead = min(cfg.data_write_lead_ns, arrival_ns)
             t0 = arrival_ns - lead
             base = self._data_marks.get(op.dst, 0)
             self._data_marks[op.dst] = base + op.data_writes
+            mark_data = 0xC0 + (src % 16)
+            mark_base = self.amap.partial_base + base * 64
             for k in range(op.data_writes):
-                t = t0 + lead * (k + 1) / (op.data_writes + 1)
-                self._register(
-                    op.dst,
-                    RegisteredWrite(
-                        wakeup_ns=t,
-                        addr=self.amap.partial_base + (base + k) * 64,
-                        data=0xC0 + (src % 16),
-                        size=8,
-                        src=src,
-                        seq=next(self._seq),
-                    ),
-                    cycle,
+                w = RegisteredWrite(
+                    wakeup_ns=t0 + lead * (k + 1) / (op.data_writes + 1),
+                    addr=mark_base + k * 64,
+                    data=mark_data,
+                    size=8,
+                    src=src,
+                    seq=next(seq),
                 )
-        self._register(
-            op.dst,
-            RegisteredWrite(
-                wakeup_ns=arrival_ns,
-                addr=addr,
-                data=op.data,
-                size=op.size,
-                src=src,
-                seq=next(self._seq),
-            ),
-            cycle,
+                if p is not None:
+                    w = p.jitter_write(w)
+                if w.wakeup_ns < min_ns:
+                    w = replace(w, wakeup_ns=min_ns)
+                register(w)
+        w = RegisteredWrite(
+            wakeup_ns=arrival_ns,
+            addr=addr,
+            data=op.data,
+            size=op.size,
+            src=src,
+            seq=next(seq),
         )
-
-    def _register(self, dst: int, w: RegisteredWrite, issue_cycle: int) -> None:
-        """Register ``w`` in ``dst``'s WTT, enforcing causality.
-
-        A write emitted at ``issue_cycle`` can never become visible in the
-        same cycle (jitter perturbations could otherwise pull it into the
-        past, which the two engines would order differently).
-        """
-        p = self._perturb_for(dst)
         if p is not None:
             w = p.jitter_write(w)
-        min_ns = self.cfg.cycles_to_ns(issue_cycle + 1)
         if w.wakeup_ns < min_ns:
             w = replace(w, wakeup_ns=min_ns)
-        self.nodes[dst].wtt.register(w)
+        register(w)
 
     # ------------------------------------------------------------------
     # running
@@ -288,6 +349,8 @@ class Cluster:
                 "closed_loop": True,
                 "device_spans_ns": spans,
                 "fabric": dict(self.fabric.stats),
+                "n_nodes": self.fabric.n_nodes,
+                "devices_per_node": self.fabric.devices_per_node,
                 **{f"param_{k}": v for k, v in self.scenario.params.items()},
             },
             n_devices=cfg.n_devices,

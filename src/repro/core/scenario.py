@@ -234,6 +234,11 @@ class Scenario(abc.ABC):
         self.cfg = cfg
         self.amap = amap or self.default_amap(cfg)
         self.params: Dict[str, object] = {}
+        # Closed-loop fabric shape: scenarios that take a ``devices_per_node``
+        # knob set this to a tier-explicit Topology (see
+        # ``Topology.for_devices``); the Cluster derives its FabricModel from
+        # it.  ``None`` means the flat single-tier ring over cfg.n_devices.
+        self.topology = None  # type: ignore[assignment]
 
     @classmethod
     def default_amap(cls, cfg: SimConfig) -> AddressMap:
@@ -351,6 +356,36 @@ def _resolve(scenario: ScenarioLike, cfg: SimConfig, params: Dict) -> Scenario:
     return cls(cfg, **params)
 
 
+def _resolve_shape(
+    devices: Optional[int],
+    nodes: Optional[int],
+    devices_per_node: Optional[int],
+) -> Tuple[Optional[int], Optional[int]]:
+    """Resolve the (devices, devices_per_node) pair from any two of the
+    ``devices`` / ``nodes`` / ``devices_per_node`` knobs."""
+    if nodes is not None and nodes < 1:
+        raise ValueError("nodes must be >= 1")
+    if devices_per_node is not None and devices_per_node < 1:
+        raise ValueError("devices_per_node must be >= 1")
+    if nodes is None:
+        return devices, devices_per_node
+    if devices_per_node is not None:
+        total = nodes * devices_per_node
+        if devices is not None and devices != total:
+            raise ValueError(
+                f"devices={devices} contradicts nodes={nodes} x "
+                f"devices_per_node={devices_per_node}"
+            )
+        return total, devices_per_node
+    if devices is None:
+        raise ValueError(
+            "nodes= needs devices= or devices_per_node= to fix the shape"
+        )
+    if devices % nodes:
+        raise ValueError(f"devices={devices} not divisible by nodes={nodes}")
+    return devices, devices // nodes
+
+
 def simulate(
     scenario: ScenarioLike,
     cfg: Optional[SimConfig] = None,
@@ -358,6 +393,8 @@ def simulate(
     perturb=None,
     collect_segments: bool = True,
     devices: Optional[int] = None,
+    nodes: Optional[int] = None,
+    devices_per_node: Optional[int] = None,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -373,6 +410,12 @@ def simulate(
     ``devices - 1``), e.g. ``simulate("ring_allreduce", cfg, devices=8,
     closed_loop=True)``.
 
+    ``nodes`` / ``devices_per_node`` fix the tiered fabric shape: any two of
+    (``devices``, ``nodes``, ``devices_per_node``) determine the third, and
+    the resolved ``devices_per_node`` is forwarded to the scenario (which
+    builds its :class:`repro.core.topology.Topology` from it), e.g.
+    ``simulate("hierarchical_allreduce", nodes=4, devices_per_node=4)``.
+
     Scenarios built with ``closed_loop=True`` run in a
     :class:`repro.core.cluster.Cluster` (every device program-driven, flags
     routed over the fabric); otherwise the single-detailed-device
@@ -381,6 +424,9 @@ def simulate(
     """
     from .simulator import Eidola  # late import: simulator imports target
 
+    devices, dpn = _resolve_shape(devices, nodes, devices_per_node)
+    if dpn is not None:
+        params.setdefault("devices_per_node", dpn)
     if devices is not None:
         cfg = (cfg or SimConfig()).with_devices(devices)
     if isinstance(scenario, Scenario):
@@ -478,8 +524,16 @@ class SweepRunner:
         points: List[SweepPoint] = []
         for combo in combos:
             assignment = dict(zip(keys, combo))
-            # "devices" is sugar for the total device count (like simulate())
-            devices = assignment.pop("devices", None)
+            # "devices"/"nodes" are sugar for the fabric shape (as in
+            # simulate()); the resolved devices_per_node stays a scenario
+            # parameter so it reaches the constructor and the sweep row
+            devices, dpn = _resolve_shape(
+                assignment.pop("devices", None),
+                assignment.pop("nodes", None),
+                assignment.get("devices_per_node"),
+            )
+            if dpn is not None:
+                assignment["devices_per_node"] = dpn
             overrides = {k: v for k, v in assignment.items() if k in _CFG_FIELDS}
             if devices is not None:
                 overrides["n_egpus"] = SimConfig().with_devices(devices).n_egpus

@@ -12,16 +12,21 @@ Importing this package registers every built-in with the scenario registry
   shard and a completion flag; the target barriers on all of them.
 * ``pipeline_p2p``   — pipeline-parallel stage: per-microbatch activation
   wait -> forward compute -> p2p send to the next stage.
+* ``hierarchical_allreduce`` — closed-loop cross-tier collective: intra-node
+  ring reduce-scatter (ICI), leader ring all-reduce over the DCI uplinks,
+  intra-node broadcast.
 """
 
 from .all_to_all import AllToAllScenario
 from .gemv_allreduce import GemvAllReduceScenario
+from .hierarchical_allreduce import HierarchicalAllReduceScenario
 from .pipeline_p2p import PipelineP2PScenario
 from .ring_allreduce import RingAllReduceScenario
 
 __all__ = [
     "AllToAllScenario",
     "GemvAllReduceScenario",
+    "HierarchicalAllReduceScenario",
     "PipelineP2PScenario",
     "RingAllReduceScenario",
 ]

@@ -56,6 +56,7 @@ class AllToAllScenario(Scenario):
         skew_ns: float = 2_000.0,
         writes_per_peer: int = 8,
         closed_loop: bool = False,
+        devices_per_node: Optional[int] = None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -66,17 +67,23 @@ class AllToAllScenario(Scenario):
         self.skew_ns = float(skew_ns)
         self.writes_per_peer = int(writes_per_peer)
         self.closed_loop = bool(closed_loop)
+        self.devices_per_node = devices_per_node
         self.hw = hw
         k = cfg.n_devices
         self.payload_bytes = self.tokens_per_device * self.token_bytes
-        topo = Topology(axis_sizes=(k,), axis_names=("ep",), hw=hw, dci_axes=())
-        self.cost = topo.collective("all-to-all", self.payload_bytes, "ep")
+        # Closed-loop fabric shape (flat when devices_per_node is unset); the
+        # open-loop arrival schedule keeps the flat single-tier algebra.
+        self.topology = Topology.for_devices(k, devices_per_node, hw=hw)
+        self.cost = Topology.flat_ring(k, axis="ep", hw=hw).collective(
+            "all-to-all", self.payload_bytes, "ep"
+        )
         self.base_arrival_ns = self.cost.time_s * 1e9
         self.params = {
             "tokens_per_device": self.tokens_per_device,
             "token_bytes": self.token_bytes,
             "skew_ns": self.skew_ns,
             "closed_loop": self.closed_loop,
+            "devices_per_node": self.devices_per_node,
         }
 
     # ------------------------------------------------------------------

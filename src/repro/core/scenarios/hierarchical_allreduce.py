@@ -1,0 +1,307 @@
+"""Hierarchical (intra-node / inter-node) all-reduce as a closed-loop scenario.
+
+The canonical cross-tier collective on a pod of nodes: every rank first
+participates in an **intra-node ring reduce-scatter** over the ICI tier, the
+non-leader ranks hand their reduced shards to the node leader, the **node
+leaders ring-all-reduce over the DCI tier** while everyone else sits in the
+broadcast wait, and finally each leader **broadcasts** the result back to its
+node.  Every stage hand-off is flag-synchronized through
+:class:`repro.core.scenario.EmitOp` slots, so nothing is pre-scheduled — the
+stage cadence emerges from compute + tiered fabric routing, and slowing the
+DCI tier lengthens exactly the leader-stage waits (``hir_wait`` on leaders,
+``hbc_wait`` on everyone else) while the intra-node reduce-scatter stage is
+untouched (asserted in ``tests/test_hierarchy.py``).
+
+Wait phases carry stage-specific names (``hrs_wait`` / ``hir_wait`` /
+``hbc_wait``) precisely so per-stage timelines can be told apart; the
+interpreter treats any registered name with ``wait_addrs`` as a wait phase.
+
+Closed-loop only: with one detailed device there is no tier to cross.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+from ..config import SimConfig
+from ..events import TraceBundle, register_phase
+from ..memory import AddressMap
+from ..scenario import (
+    EmitOp,
+    PhaseSpec,
+    Scenario,
+    WGProgram,
+    local_writes,
+    reads,
+    register_scenario,
+    xgmi_out,
+)
+from ..topology import HardwareSpec, Topology, V5E
+
+__all__ = ["HierarchicalAllReduceScenario"]
+
+register_phase("hrs_send", color="green", glyph="s")
+register_phase("hrs_reduce", color="brown", glyph="+")
+register_phase("hrs_handoff", color="blue", glyph="^")
+register_phase("hrs_wait", color="red", glyph="r")
+register_phase("hir_send", color="green", glyph="S")
+register_phase("hir_reduce", color="brown", glyph="*")
+register_phase("hir_gather", color="blue", glyph="a")
+register_phase("hir_wait", color="red", glyph="R")
+register_phase("hbc_push", color="blue", glyph="v")
+register_phase("hbc_read", color="green", glyph="b")
+register_phase("hbc_wait", color="red", glyph="w")
+
+
+@register_scenario
+class HierarchicalAllReduceScenario(Scenario):
+    """Intra-node reduce-scatter -> leader ring all-reduce -> broadcast."""
+
+    name = "hierarchical_allreduce"
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        amap: Optional[AddressMap] = None,
+        *,
+        payload_bytes: int = 1 << 20,
+        devices_per_node: Optional[int] = None,
+        writes_per_step: int = 4,
+        closed_loop: bool = True,
+        hw: HardwareSpec = V5E,
+    ):
+        if not closed_loop:
+            raise ValueError(
+                "hierarchical_allreduce is closed-loop only (the stages are "
+                "emitted, never pre-scheduled)"
+            )
+        if payload_bytes <= 0:
+            raise ValueError("payload_bytes must be positive")
+        n = cfg.n_devices
+        dpn = n if devices_per_node is None else int(devices_per_node)
+        if dpn < 1 or n % dpn:
+            raise ValueError(
+                f"devices_per_node={dpn} must divide n_devices={n}"
+            )
+        self.dpn = dpn
+        self.n_nodes = n // dpn
+        # slots: [0, dpn-2] intra ring steps, dpn-1 shard handoff to the
+        # leader, [dpn, dpn + 2(nodes-1)) leader ring steps, last = broadcast
+        self.leader_slot_base = dpn
+        self.bcast_slot = dpn + 2 * (self.n_nodes - 1)
+        if amap is None:
+            amap = AddressMap(n_devices=n, flag_slots=self.bcast_slot + 1)
+        super().__init__(cfg, amap)
+        self.payload_bytes = int(payload_bytes)
+        self.devices_per_node = devices_per_node
+        self.writes_per_step = int(writes_per_step)
+        self.closed_loop = True
+        self.hw = hw
+        self.topology = Topology.for_devices(n, devices_per_node, hw=hw)
+        self.params = {
+            "payload_bytes": self.payload_bytes,
+            "devices_per_node": self.devices_per_node,
+            "writes_per_step": self.writes_per_step,
+            "closed_loop": True,
+        }
+
+    # ------------------------------------------------------------------
+
+    def _share(self, nbytes: int) -> Tuple[int, int, int]:
+        """(bytes, sectors, cycles) of one WG's slice of an ``nbytes`` block."""
+        cfg = self.cfg
+        share = max(1, nbytes // cfg.workgroups)
+        sectors = math.ceil(share / cfg.sector_bytes)
+        cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
+        return share, sectors, cycles
+
+    def _emit(self, dst: int, slot: int, payload: int) -> Tuple[EmitOp, ...]:
+        return (
+            EmitOp(
+                dst,
+                slot=slot,
+                payload_bytes=payload,
+                data_writes=self.writes_per_step,
+            ),
+        )
+
+    def programs_for(self, device: int) -> List[WGProgram]:
+        cfg = self.cfg
+        dpn, nodes = self.dpn, self.n_nodes
+        node, local = divmod(device, dpn)
+        leader = node * dpn
+        is_leader = local == 0
+        chunk1 = max(1, self.payload_bytes // dpn)
+        share1, sectors1, cycles1 = self._share(chunk1)
+        phases: List[PhaseSpec] = []
+
+        # ---- stage 1: intra-node ring reduce-scatter (ICI tier) ----------
+        if dpn > 1:
+            local_up = node * dpn + (local - 1) % dpn
+            local_down = node * dpn + (local + 1) % dpn
+            phases.append(
+                PhaseSpec(
+                    "hrs_send",
+                    cycles1,
+                    traffic=(
+                        reads(sectors1, cfg.sector_bytes),
+                        xgmi_out(1, share1),
+                    ),
+                    emits=self._emit(local_down, 0, chunk1),
+                )
+            )
+            for s in range(dpn - 1):
+                phases.append(
+                    PhaseSpec(
+                        "hrs_wait",
+                        wait_addrs=(self.amap.flag_addr(local_up, slot=s),),
+                    )
+                )
+                last_rs = s == dpn - 2
+                traffic = [
+                    reads(2 * sectors1, cfg.sector_bytes),
+                    local_writes(1, share1),
+                ]
+                if not last_rs:
+                    traffic.append(xgmi_out(1, share1))
+                phases.append(
+                    PhaseSpec(
+                        "hrs_reduce",
+                        cycles1,
+                        traffic=tuple(traffic),
+                        emits=()
+                        if last_rs
+                        else self._emit(local_down, s + 1, chunk1),
+                    )
+                )
+            # shard handoff: non-leaders push their reduced shard to the
+            # leader; the leader barriers on all dpn-1 handoff flags
+            if is_leader:
+                phases.append(
+                    PhaseSpec(
+                        "hrs_wait",
+                        wait_addrs=tuple(
+                            self.amap.flag_addr(node * dpn + l2, slot=dpn - 1)
+                            for l2 in range(1, dpn)
+                        ),
+                    )
+                )
+            else:
+                phases.append(
+                    PhaseSpec(
+                        "hrs_handoff",
+                        cycles1,
+                        traffic=(xgmi_out(1, share1),),
+                        emits=self._emit(leader, dpn - 1, chunk1),
+                    )
+                )
+
+        # ---- stage 2: leader ring all-reduce (DCI tier) ------------------
+        if nodes > 1 and is_leader:
+            chunk2 = max(1, self.payload_bytes // nodes)
+            share2, sectors2, cycles2 = self._share(chunk2)
+            up_leader = ((node - 1) % nodes) * dpn
+            down_leader = ((node + 1) % nodes) * dpn
+            base = self.leader_slot_base
+            steps2 = 2 * (nodes - 1)
+            rs2 = nodes - 1
+            phases.append(
+                PhaseSpec(
+                    "hir_send",
+                    cycles2,
+                    traffic=(
+                        reads(sectors2, cfg.sector_bytes),
+                        xgmi_out(1, share2),
+                    ),
+                    emits=self._emit(down_leader, base, chunk2),
+                )
+            )
+            for s in range(steps2):
+                phases.append(
+                    PhaseSpec(
+                        "hir_wait",
+                        wait_addrs=(
+                            self.amap.flag_addr(up_leader, slot=base + s),
+                        ),
+                    )
+                )
+                reducing = s < rs2
+                last = s == steps2 - 1
+                traffic = [
+                    reads(
+                        sectors2 * (2 if reducing else 1), cfg.sector_bytes
+                    ),
+                    local_writes(1, share2),
+                ]
+                if not last:
+                    traffic.append(xgmi_out(1, share2))
+                phases.append(
+                    PhaseSpec(
+                        "hir_reduce" if reducing else "hir_gather",
+                        cycles2,
+                        traffic=tuple(traffic),
+                        emits=()
+                        if last
+                        else self._emit(down_leader, base + s + 1, chunk2),
+                    )
+                )
+
+        # ---- stage 3: intra-node broadcast (ICI tier) --------------------
+        shareF, sectorsF, cyclesF = self._share(self.payload_bytes)
+        if dpn > 1:
+            if is_leader:
+                phases.append(
+                    PhaseSpec(
+                        "hbc_push",
+                        cyclesF,
+                        traffic=(xgmi_out(dpn - 1, shareF),),
+                        emits=tuple(
+                            EmitOp(
+                                node * dpn + l2,
+                                slot=self.bcast_slot,
+                                payload_bytes=self.payload_bytes,
+                                data_writes=self.writes_per_step,
+                            )
+                            for l2 in range(1, dpn)
+                        ),
+                    )
+                )
+            else:
+                phases.append(
+                    PhaseSpec(
+                        "hbc_wait",
+                        wait_addrs=(
+                            self.amap.flag_addr(leader, slot=self.bcast_slot),
+                        ),
+                    )
+                )
+        phases.append(
+            PhaseSpec(
+                "hbc_read",
+                cyclesF,
+                traffic=(
+                    reads(sectorsF, cfg.sector_bytes),
+                    local_writes(1, shareF),
+                ),
+            )
+        )
+
+        shared = tuple(phases)
+        return [
+            WGProgram(
+                wg=wg,
+                cu=wg % cfg.n_cus,
+                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
+                phases=shared,
+            )
+            for wg in range(cfg.workgroups)
+        ]
+
+    # closed-loop only fallbacks -------------------------------------------
+
+    def programs(self) -> List[WGProgram]:
+        raise NotImplementedError("hierarchical_allreduce is closed-loop only")
+
+    def traces(self) -> TraceBundle:
+        return TraceBundle(meta={"scenario": self.name, "closed_loop": True})

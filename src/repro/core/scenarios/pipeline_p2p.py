@@ -58,6 +58,7 @@ class PipelineP2PScenario(Scenario):
         writes_per_microbatch: int = 4,
         interval_ns: Optional[float] = None,
         closed_loop: bool = False,
+        devices_per_node: Optional[int] = None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -68,16 +69,22 @@ class PipelineP2PScenario(Scenario):
         self.compute_scale = float(compute_scale)
         self.writes_per_microbatch = int(writes_per_microbatch)
         self.closed_loop = bool(closed_loop)
+        self.devices_per_node = devices_per_node
         self.hw = hw
         self.upstream = 1  # previous stage
         # next stage: where the p2p_send traffic is headed (trace metadata;
         # outgoing writes are aggregate counters, not per-address)
         self.downstream = 2 if cfg.n_devices > 2 else 1
-        topo = Topology(axis_sizes=(cfg.n_devices,), axis_names=("pp",), hw=hw,
-                        dci_axes=())
-        self.cost = topo.collective(
-            "collective-permute", self.activation_bytes, "pp"
+        # Closed-loop fabric shape: consecutive pipeline stages share a node
+        # until a stage boundary crosses a node boundary, where the hand-off
+        # rides the DCI uplink (flat when devices_per_node is unset).  The
+        # open-loop cadence keeps the flat single-tier algebra.
+        self.topology = Topology.for_devices(
+            cfg.n_devices, devices_per_node, hw=hw
         )
+        self.cost = Topology.flat_ring(
+            cfg.n_devices, axis="pp", hw=hw
+        ).collective("collective-permute", self.activation_bytes, "pp")
         if interval_ns is not None:
             self.interval_ns = float(interval_ns)
         else:
@@ -87,6 +94,7 @@ class PipelineP2PScenario(Scenario):
             "activation_bytes": self.activation_bytes,
             "interval_ns": self.interval_ns,
             "closed_loop": self.closed_loop,
+            "devices_per_node": self.devices_per_node,
         }
 
     @classmethod

@@ -64,6 +64,7 @@ class RingAllReduceScenario(Scenario):
         step_time_ns: Optional[float] = None,
         writes_per_step: int = 4,
         closed_loop: bool = False,
+        devices_per_node: Optional[int] = None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -72,12 +73,19 @@ class RingAllReduceScenario(Scenario):
         self.payload_bytes = int(payload_bytes)
         self.writes_per_step = int(writes_per_step)
         self.closed_loop = bool(closed_loop)
+        self.devices_per_node = devices_per_node
         self.hw = hw
         k = cfg.n_devices
         self.steps = 2 * (k - 1)
         self.upstream = k - 1
-        topo = Topology(axis_sizes=(k,), axis_names=("ring",), hw=hw, dci_axes=())
-        self.cost = topo.collective("all-reduce", self.payload_bytes, "ring")
+        # Closed-loop fabric shape: the global ring maps onto intra-node ICI
+        # rings stitched by DCI uplinks (flat when devices_per_node is unset).
+        self.topology = Topology.for_devices(k, devices_per_node, hw=hw)
+        # Open-loop cadence keeps the flat single-ring collective algebra the
+        # trace schedule was always derived from.
+        self.cost = Topology.flat_ring(k, axis="ring", hw=hw).collective(
+            "all-reduce", self.payload_bytes, "ring"
+        )
         if step_time_ns is not None:
             self.step_time_ns = float(step_time_ns)
         else:
@@ -87,6 +95,7 @@ class RingAllReduceScenario(Scenario):
             "step_time_ns": self.step_time_ns,
             "writes_per_step": self.writes_per_step,
             "closed_loop": self.closed_loop,
+            "devices_per_node": self.devices_per_node,
         }
 
     @classmethod

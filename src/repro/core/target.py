@@ -31,9 +31,16 @@ advances the whole cohort; traffic is accounted in closed form (each bulk
 counter multiplied by the member count — exactly how ``vector_engine.py``
 already scores spin waits across all workgroups at once), and timeline segments
 are stored once per cohort and stamped per member only at collection time.
-Anything member-dependent — SyncMon requeue jitter / CU-keyed wake coalescing,
-or a perturbation (keyed by wg id) — falls back to singleton cohorts, which is
-bit-for-bit the old per-workgroup interpreter.
+Under SyncMon the only member-keyed *state* is the deterministic requeue
+jitter (``wg % requeue_jitter_mod``), so cohorts split by jitter class —
+workgroups sharing (dispatch cycle, phase program, jitter class) advance as
+one counted unit even when their ids interleave.  The CU (``wg % n_cus`` in
+every built-in scenario) never diverges member state; it only shapes the
+coalesced validation-read *accounting* on wake, which is scored from the
+cohort's per-member CU list, grouped across cohorts exactly as the
+per-workgroup interpreter groups individual workgroups.  A perturbation
+(keyed by wg id) still forces singleton cohorts, which is bit-for-bit the old
+per-workgroup interpreter.
 
 The model is engine-agnostic: cycle-poll and event-queue engines drive the
 same transitions and therefore produce bit-identical traffic and timelines.
@@ -71,9 +78,13 @@ class _Cohort:
     """
 
     program: WGProgram
-    members: Tuple[int, ...]      # consecutive wg ids sharing this state
+    members: Tuple[int, ...]      # wg ids sharing this state (consecutive
+                                  # under SPIN; same jitter class under
+                                  # SyncMon, where they may interleave)
     idx: int = 0                  # position in TargetDevice.cohorts
     count: int = 1                # len(members), denormalized for the hot path
+    member_cus: Tuple[int, ...] = ()    # per-member CU (SyncMon wake
+                                        # coalescing accounts reads per CU)
     phases: Tuple[PhaseSpec, ...] = ()  # program.phases, denormalized
     phase_idx: int = -1           # -1 = not yet dispatched
     phase_start: int = 0          # cycle the current phase began
@@ -149,32 +160,58 @@ class TargetDevice:
         if [p.wg for p in programs] != list(range(len(programs))):
             raise ValueError("WGProgram ids must be contiguous from 0")
         self.n_wgs = len(programs)
-        # Cohort batching is valid only when no per-member state can diverge:
-        # SyncMon jitters requeues by wg id and coalesces wakes by CU, and a
-        # perturbation scales phases by wg id — both force singletons.
-        batch = cohorts and cfg.sync == SyncPolicy.SPIN and perturb is None
-        self.cohorts: List[_Cohort] = []
-        for p in programs:
-            prev = self.cohorts[-1] if self.cohorts else None
-            if (
-                batch
-                and prev is not None
-                and prev.program.dispatch_cycle == p.dispatch_cycle
-                and (prev.program.phases is p.phases
-                     or prev.program.phases == p.phases)
-            ):
-                prev.members = prev.members + (p.wg,)
-            else:
-                self.cohorts.append(
-                    _Cohort(
-                        program=p,
-                        members=(p.wg,),
-                        idx=len(self.cohorts),
-                        phases=p.phases,
-                    )
-                )
-        for c in self.cohorts:
-            c.count = len(c.members)
+        # Cohort batching is valid only when no per-member state can diverge.
+        # A perturbation scales phases by wg id — singletons.  Under SPIN,
+        # nothing is member-keyed: maximal runs of consecutive workgroups
+        # sharing (dispatch cycle, phases) batch.  Under SyncMon, the only
+        # state divergence is the deterministic requeue jitter (wg %
+        # requeue_jitter_mod), so workgroups of the same *jitter class* (and
+        # dispatch cycle and phases) batch even when interleaved; the CU only
+        # affects the coalesced-validation-read accounting, which is scored
+        # from the per-member CU list at wake time.
+        batch = cohorts and perturb is None
+        # (first_program, member_wgs, member_cus) triples, frozen below
+        groups: List[Tuple[WGProgram, List[int], List[int]]] = []
+        if batch and cfg.sync == SyncPolicy.SPIN:
+            for p in programs:
+                g = groups[-1] if groups else None
+                if (
+                    g is not None
+                    and g[0].dispatch_cycle == p.dispatch_cycle
+                    and (g[0].phases is p.phases or g[0].phases == p.phases)
+                ):
+                    g[1].append(p.wg)
+                    g[2].append(p.cu)
+                else:
+                    groups.append((p, [p.wg], [p.cu]))
+        elif batch and cfg.sync == SyncPolicy.SYNCMON:
+            mod = max(1, cfg.requeue_jitter_mod)
+            token: Dict[int, int] = {}  # id(phases) -> small int
+            index: Dict[Tuple[int, int, int], int] = {}
+            for p in programs:
+                t = token.setdefault(id(p.phases), len(token))
+                key = (p.dispatch_cycle, t, p.wg % mod)
+                gi = index.get(key)
+                if gi is None:
+                    index[key] = len(groups)
+                    groups.append((p, [p.wg], [p.cu]))
+                else:
+                    g = groups[gi]
+                    g[1].append(p.wg)
+                    g[2].append(p.cu)
+        else:
+            groups = [(p, [p.wg], [p.cu]) for p in programs]
+        self.cohorts: List[_Cohort] = [
+            _Cohort(
+                program=p,
+                members=tuple(wgs),
+                member_cus=tuple(cus),
+                idx=i,
+                count=len(wgs),
+                phases=p.phases,
+            )
+            for i, (p, wgs, cus) in enumerate(groups)
+        ]
         # wg id -> cohort index (monitor wakes are keyed by wg id)
         self._by_wg: Dict[int, int] = {
             wg: c.idx for c in self.cohorts for wg in c.members
@@ -370,8 +407,8 @@ class TargetDevice:
                 c.blocked_on = addr
                 self._spin_waiters.setdefault(addr, set()).add(c.idx)
                 return
-            else:  # SYNCMON (singleton cohorts by construction)
-                # one check read (sees unset or not-yet-visible)
+            else:  # SYNCMON (members share jitter class -> identical state)
+                # one check read per member (sees unset or not-yet-visible)
                 self.memory.bulk_reads(n, bytes_each=8, flag=True)
                 t_arm = c.t_cursor + cfg.monitor_arm_cycles
                 if set_c is not None and set_c <= t_arm:
@@ -383,10 +420,16 @@ class TargetDevice:
                     c.t_cursor = t_arm + cfg.flag_check_cycles
                     c.flag_idx += 1
                     continue
-                # arm + deschedule
+                # arm + deschedule: every member arms its own monitor (one
+                # Monitor Log row each in the per-workgroup interpreter; a
+                # multi-member cohort shares one row but accounts the same
+                # number of armings, and all members wake together)
                 entry = self.monitor_log.monitor(addr, 8, 1)
-                entry.waiting_wfs.add(c.program.wg)
-                self._armed[c.program.wg] = entry
+                for wg in c.members:
+                    entry.waiting_wfs.add(wg)
+                    self._armed[wg] = entry
+                if n > 1:
+                    self.monitor_log.stats["monitors_armed"] += n - 1
                 c.blocked_on = addr
                 c.in_mwait = True
                 c.t_arm = t_arm
@@ -436,52 +479,69 @@ class TargetDevice:
             pending = self.monitor_log.pop_wakes_until(
                 cycle + cfg.wake_latency_cycles
             )
-            # group simultaneous wakes by (wake_cycle, cu) for the coalesced
-            # validation read accounting
-            groups: Dict[Tuple[int, int], List[int]] = {}
+            # A cohort's members armed one entry together and wake together,
+            # so scan the pending wakes once per cohort.  The coalesced
+            # validation read accounting stays *member*-granular: simultaneous
+            # wakes group by (wake_cycle, cu) ACROSS cohorts, exactly as the
+            # per-workgroup interpreter groups individual workgroups.
+            race: List[_Cohort] = []
+            woken: List[Tuple[int, _Cohort]] = []
+            groups: Dict[Tuple[int, int], int] = {}
+            seen: Set[int] = set()
             for wg_id, wake_c in pending:
-                c = self.cohorts[self._by_wg[wg_id]]
+                ci = self._by_wg[wg_id]
+                if ci in seen:
+                    continue
+                c = self.cohorts[ci]
                 if not c.in_mwait:
                     continue
+                seen.add(ci)
                 if cycle <= c.t_arm:
-                    # race window: the write landed between the check read and
-                    # the monitor arming; the mwait returns immediately after
-                    # its own (uncoalesced) validation read at arm time
-                    self.memory.bulk_reads(1, bytes_each=8, flag=True)
-                    c.in_mwait = False
-                    self._armed.pop(wg_id, None)
-                    if c.desched_segments and c.desched_segments[-1][1] == -1:
-                        c.desched_segments.pop()  # never actually descheduled
-                    if self.monitor_log is not None:
-                        self.monitor_log.stats["immediate_mwait_returns"] += 1
-                    c.blocked_on = None
-                    c.flag_idx += 1
-                    c.t_cursor = c.t_arm + cfg.flag_check_cycles
-                    self._push(c.t_cursor, c.idx)
+                    race.append(c)
                     continue
-                groups.setdefault((wake_c, c.program.cu), []).append(wg_id)
-            for (wake_c, _cu), members in sorted(groups.items()):
-                n_reads = math.ceil(len(members) / max(1, cfg.wake_coalesce_width))
-                self.memory.bulk_reads(n_reads, bytes_each=8, flag=True)
-                for wg_id in members:
-                    c = self.cohorts[self._by_wg[wg_id]]
-                    c.in_mwait = False
-                    self._armed.pop(wg_id, None)
-                    # close the descheduled segment
-                    if c.desched_segments and c.desched_segments[-1][1] == -1:
-                        st = c.desched_segments[-1][0]
-                        c.desched_segments[-1] = (st, wake_c)
-                    jitter = c.program.wg % max(1, cfg.requeue_jitter_mod)
-                    resume = wake_c + jitter
-                    # the coalesced validation read observed the blocking flag;
-                    # if it is (now) set, advance past it without another read
-                    addr = c.blocked_on
-                    set_c = self.flag_set_cycle.get(addr)
-                    if set_c is not None and set_c <= resume:
-                        c.flag_idx += 1
-                    c.blocked_on = None
-                    c.t_cursor = resume + cfg.flag_check_cycles
-                    self._push(c.t_cursor, c.idx)
+                for cu in (c.member_cus or (c.program.cu,) * c.count):
+                    key = (wake_c, cu)
+                    groups[key] = groups.get(key, 0) + 1
+                woken.append((wake_c, c))
+            for c in race:
+                # race window: the write landed between the check read and
+                # the monitor arming; the mwait returns immediately after
+                # its own (uncoalesced) validation read at arm time
+                self.memory.bulk_reads(c.count, bytes_each=8, flag=True)
+                c.in_mwait = False
+                for wg in c.members:
+                    self._armed.pop(wg, None)
+                if c.desched_segments and c.desched_segments[-1][1] == -1:
+                    c.desched_segments.pop()  # never actually descheduled
+                self.monitor_log.stats["immediate_mwait_returns"] += c.count
+                c.blocked_on = None
+                c.flag_idx += 1
+                c.t_cursor = c.t_arm + cfg.flag_check_cycles
+                self._push(c.t_cursor, c.idx)
+            width = max(1, cfg.wake_coalesce_width)
+            for (wake_c, _cu), n_members in sorted(groups.items()):
+                self.memory.bulk_reads(
+                    math.ceil(n_members / width), bytes_each=8, flag=True
+                )
+            for wake_c, c in woken:
+                c.in_mwait = False
+                for wg in c.members:
+                    self._armed.pop(wg, None)
+                # close the descheduled segment
+                if c.desched_segments and c.desched_segments[-1][1] == -1:
+                    st = c.desched_segments[-1][0]
+                    c.desched_segments[-1] = (st, wake_c)
+                jitter = c.program.wg % max(1, cfg.requeue_jitter_mod)
+                resume = wake_c + jitter
+                # the coalesced validation read observed the blocking flag;
+                # if it is (now) set, advance past it without another read
+                addr = c.blocked_on
+                set_c = self.flag_set_cycle.get(addr)
+                if set_c is not None and set_c <= resume:
+                    c.flag_idx += 1
+                c.blocked_on = None
+                c.t_cursor = resume + cfg.flag_check_cycles
+                self._push(c.t_cursor, c.idx)
 
     # ------------------------------------------------------------------
     # results

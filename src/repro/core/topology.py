@@ -1,4 +1,4 @@
-"""Interconnect topology and collective-cost model.
+"""Interconnect topology, collective-cost model, and the tiered fabric.
 
 Maps the paper's xGMI fabric onto the TPU v5e target: a 2D ICI torus within a
 pod (16x16 for the production mesh) and a lower-bandwidth inter-pod fabric for
@@ -6,6 +6,14 @@ the ``pod`` axis.  Collective costs use standard ring/bidirectional-ring
 algebra; they feed the roofline's collective term cross-check and generate
 arrival schedules for Eidola pod-scale replay (each ring step's completion is
 one semaphore write — the TPU analogue of the paper's flag writes).
+
+:class:`FabricModel` is the closed-loop counterpart: per-message routing over
+a *tiered* fabric (intra-node ICI rings stitched by per-node DCI uplinks,
+each egress port with its own serialization/contention state), which the
+:class:`repro.core.cluster.Cluster` uses to derive physical arrival times for
+emitted flag writes.  ``Topology.flat_ring`` / ``two_tier`` /
+``for_devices`` make tier participation explicit, and
+``FabricModel.from_topology`` derives the closed-loop shape from them.
 
 Hardware constants follow the assignment: 197 TFLOP/s bf16 per chip,
 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -76,8 +84,88 @@ class Topology:
     def n_chips(self) -> int:
         return math.prod(self.axis_sizes)
 
+    @property
+    def devices_per_node(self) -> int:
+        """Chips reachable over the intra-node (ICI) tier: the product of
+        every axis NOT routed over the DCI fabric."""
+        out = 1
+        for n, s in zip(self.axis_names, self.axis_sizes):
+            if n not in self.dci_axes:
+                out *= s
+        return out
+
+    @property
+    def n_nodes(self) -> int:
+        """Number of nodes (DCI endpoints): the product of the DCI axes."""
+        out = 1
+        for n, s in zip(self.axis_names, self.axis_sizes):
+            if n in self.dci_axes:
+                out *= s
+        return out
+
     def axis_size(self, name: str) -> int:
         return self.axis_sizes[self.axis_names.index(name)]
+
+    # ------------------------------------------------------------------
+    # tier-explicit constructors (scenarios use these instead of spelling
+    # out dci_axes, so tier participation is always intentional)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def flat_ring(cls, n: int, axis: str = "ring", hw: HardwareSpec = V5E) -> "Topology":
+        """A single-tier ring of ``n`` chips: every hop is intra-node ICI."""
+        if n < 1:
+            raise ValueError("flat_ring needs at least 1 chip")
+        return cls(axis_sizes=(n,), axis_names=(axis,), hw=hw, dci_axes=())
+
+    @classmethod
+    def two_tier(
+        cls,
+        n_nodes: int,
+        devices_per_node: int,
+        hw: HardwareSpec = V5E,
+        *,
+        intra_axis: str = "ici",
+        inter_axis: str = "dcn",
+    ) -> "Topology":
+        """``n_nodes`` nodes of ``devices_per_node`` chips each: the intra
+        axis rides ICI, the inter axis rides the DCI fabric."""
+        if n_nodes < 1 or devices_per_node < 1:
+            raise ValueError("n_nodes and devices_per_node must be >= 1")
+        return cls(
+            axis_sizes=(n_nodes, devices_per_node),
+            axis_names=(inter_axis, intra_axis),
+            hw=hw,
+            dci_axes=(inter_axis,),
+        )
+
+    @classmethod
+    def for_devices(
+        cls,
+        n_devices: int,
+        devices_per_node: Optional[int] = None,
+        hw: HardwareSpec = V5E,
+        *,
+        intra_axis: str = "ici",
+        inter_axis: str = "dcn",
+    ) -> "Topology":
+        """The closed-loop shape knob: ``devices_per_node=None`` (or >= the
+        device count) is the flat single-tier ring; anything smaller groups
+        the devices into nodes with a DCI tier between them."""
+        if devices_per_node is None or devices_per_node >= n_devices:
+            return cls.flat_ring(n_devices, axis=intra_axis, hw=hw)
+        if devices_per_node < 1 or n_devices % devices_per_node:
+            raise ValueError(
+                f"devices_per_node={devices_per_node} must divide "
+                f"n_devices={n_devices}"
+            )
+        return cls.two_tier(
+            n_devices // devices_per_node,
+            devices_per_node,
+            hw,
+            intra_axis=intra_axis,
+            inter_axis=inter_axis,
+        )
 
     def _fabric(self, axis: str) -> Tuple[float, float]:
         if axis in self.dci_axes:
@@ -143,7 +231,7 @@ class Topology:
 
 
 class FabricModel:
-    """Per-message routing over a bidirectional ring fabric, with contention.
+    """Per-message routing over a *tiered* fabric, with per-port contention.
 
     This is the closed-loop counterpart of :meth:`Topology.collective`: instead
     of pricing a whole collective in closed form, it prices *one xGMI write
@@ -151,14 +239,31 @@ class FabricModel:
     :class:`repro.core.cluster.Cluster` can register the write into the
     destination device's WTT at a physically-derived arrival time.
 
-    The model is deliberately simple (the paper models the fabric only through
-    per-write wakeup times):
+    Devices are grouped into nodes of ``devices_per_node`` consecutive ids
+    (``rank -> (node, local) = divmod(rank, devices_per_node)``); two tiers
+    carry traffic:
 
-    * shortest-path hop count on the ring x ``hop_latency_ns`` of pure latency;
-    * store-and-forward serialization of the burst on the *egress port*
-      (``bytes / link_bw``), with one port per (device, ring direction);
+    * **ICI (intra-node)** — the local ranks of one node form a bidirectional
+      ring; one egress port per ``(device, direction)``.
+    * **DCI (inter-node)** — the nodes form a bidirectional ring of gateway
+      devices (local rank 0); each node owns one DCI uplink port per
+      direction, with its *own* serialization/contention state.
+
+    A same-node message is exactly the classic flat-ring model on the local
+    ring.  A cross-node message composes up to three store-and-forward legs —
+    ``intra (src -> gateway) -> DCI (gateway -> gateway) -> intra (gateway ->
+    dst)`` — re-serializing and FIFO-queueing at each leg's egress port.  Per
+    leg the cost is the paper-simple recipe the flat model used:
+
+    * shortest-path hop count on the leg's ring x the tier's hop latency;
+    * store-and-forward serialization of the burst on the egress port
+      (``bytes / tier_link_bw``);
     * contention: each egress port is busy until its previous burst finished
       serializing, so back-to-back emissions queue up (FIFO per port).
+
+    With one node (``devices_per_node >= n_devices``, the default when built
+    from a device count) every message takes the single same-node leg and the
+    model is bit-for-bit the old flat ring.
 
     All state updates are deterministic in emission order, which both engines
     reproduce identically (writes before transitions, devices in id order), so
@@ -170,13 +275,25 @@ class FabricModel:
         n_devices: int,
         hw: HardwareSpec = V5E,
         *,
+        devices_per_node: Optional[int] = None,
         hop_latency_ns: Optional[float] = None,
         link_bw_bytes_per_ns: Optional[float] = None,
+        dci_hop_latency_ns: Optional[float] = None,
+        dci_link_bw_bytes_per_ns: Optional[float] = None,
     ):
         if n_devices < 2:
             raise ValueError("a fabric needs at least 2 devices")
         self.n_devices = int(n_devices)
         self.hw = hw
+        if devices_per_node is None or devices_per_node >= self.n_devices:
+            devices_per_node = self.n_devices
+        if devices_per_node < 1 or self.n_devices % devices_per_node:
+            raise ValueError(
+                f"devices_per_node={devices_per_node} must divide "
+                f"n_devices={n_devices}"
+            )
+        self.devices_per_node = int(devices_per_node)
+        self.n_nodes = self.n_devices // self.devices_per_node
         self.hop_latency_ns = (
             float(hop_latency_ns)
             if hop_latency_ns is not None
@@ -187,37 +304,263 @@ class FabricModel:
             if link_bw_bytes_per_ns is not None
             else hw.ici_link_bw * self.hw.ici_links_per_axis / 1e9
         )
+        self.dci_hop_latency_ns = (
+            float(dci_hop_latency_ns)
+            if dci_hop_latency_ns is not None
+            else hw.dci_hop_latency_s * 1e9
+        )
+        self.dci_link_bw_bytes_per_ns = (
+            float(dci_link_bw_bytes_per_ns)
+            if dci_link_bw_bytes_per_ns is not None
+            else hw.dci_link_bw / 1e9
+        )
         if self.hop_latency_ns < 0 or self.link_bw_bytes_per_ns <= 0:
             raise ValueError("hop latency must be >= 0 and link bandwidth > 0")
-        # (device, direction) -> ns at which the egress port frees up
-        self._busy_until_ns: Dict[Tuple[int, int], float] = {}
-        self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
+        if self.dci_hop_latency_ns < 0 or self.dci_link_bw_bytes_per_ns <= 0:
+            raise ValueError(
+                "DCI hop latency must be >= 0 and DCI bandwidth > 0"
+            )
+        # ICI ports are (device, direction); DCI uplinks are ("dci", node,
+        # direction) -> ns at which the egress port frees up
+        self._busy_until_ns: Dict[Tuple, float] = {}
+        self.stats = self._fresh_stats()
+
+    @classmethod
+    def from_topology(cls, topo: Topology, **overrides) -> "FabricModel":
+        """The closed-loop fabric a :class:`Topology` describes: its non-DCI
+        axes collapse into the intra-node tier, its DCI axes into the
+        inter-node tier, with bandwidths/latencies from ``topo.hw`` (keyword
+        overrides win, as in ``__init__``)."""
+        return cls(
+            topo.n_chips,
+            topo.hw,
+            devices_per_node=topo.devices_per_node,
+            **overrides,
+        )
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, float]:
+        return {
+            "messages": 0,
+            "bytes": 0,
+            "queued_ns": 0.0,
+            # per-tier leg counters (a cross-node message counts one leg per
+            # tier it traverses; totals above count each message once)
+            "ici_messages": 0,
+            "ici_bytes": 0,
+            "ici_queued_ns": 0.0,
+            "dci_messages": 0,
+            "dci_bytes": 0,
+            "dci_queued_ns": 0.0,
+        }
 
     def reset(self) -> None:
         self._busy_until_ns.clear()
-        self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
+        self.stats = self._fresh_stats()
 
-    def route(self, src: int, dst: int) -> Tuple[int, int]:
-        """(hops, direction) of the shortest ring path; +1 = ascending ids."""
-        n = self.n_devices
-        if src == dst or not (0 <= src < n and 0 <= dst < n):
-            raise ValueError(f"bad route {src} -> {dst} on {n}-device ring")
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _ring_route(src: int, dst: int, n: int) -> Tuple[int, int]:
+        """(hops, direction) of the shortest path on an ``n``-ring."""
         fwd = (dst - src) % n
         bwd = (src - dst) % n
         return (fwd, +1) if fwd <= bwd else (bwd, -1)
 
+    def _check(self, src: int, dst: int) -> None:
+        n = self.n_devices
+        if src == dst or not (0 <= src < n and 0 <= dst < n):
+            raise ValueError(f"bad route {src} -> {dst} on {n}-device fabric")
+
+    def node_of(self, device: int) -> int:
+        return device // self.devices_per_node
+
+    def route(self, src: int, dst: int) -> Tuple[int, int]:
+        """(hops, direction) of the shortest same-ring path; +1 = ascending.
+
+        Valid for same-node pairs (the intra ring; with one node that is every
+        pair, matching the old flat model).  Cross-node pairs take a composed
+        tiered path — see :meth:`route_legs`.
+        """
+        self._check(src, dst)
+        dpn = self.devices_per_node
+        sn, sl = divmod(src, dpn)
+        dn, dl = divmod(dst, dpn)
+        if sn != dn:
+            raise ValueError(
+                f"route {src} -> {dst} crosses nodes {sn} -> {dn}; tiered "
+                "paths are described by route_legs()"
+            )
+        return self._ring_route(sl, dl, dpn)
+
+    def route_legs(self, src: int, dst: int) -> List[Tuple[str, Tuple, int]]:
+        """The composed path as ``(tier, egress_port, hops)`` legs.
+
+        Same-node: one ``("ici", (src, dir), hops)`` leg.  Cross-node: an
+        optional intra leg to the source gateway, a ``("dci", ("dci", node,
+        dir), hops)`` uplink leg between gateways, and an optional intra leg
+        from the destination gateway (zero-hop legs are omitted).
+        """
+        self._check(src, dst)
+        dpn = self.devices_per_node
+        sn, sl = divmod(src, dpn)
+        dn, dl = divmod(dst, dpn)
+        if sn == dn:
+            hops, d = self._ring_route(sl, dl, dpn)
+            return [("ici", (src, d), hops)]
+        legs: List[Tuple[str, Tuple, int]] = []
+        if sl != 0:
+            hops, d = self._ring_route(sl, 0, dpn)
+            legs.append(("ici", (src, d), hops))
+        nhops, nd = self._ring_route(sn, dn, self.n_nodes)
+        legs.append(("dci", ("dci", sn, nd), nhops))
+        if dl != 0:
+            hops, d = self._ring_route(0, dl, dpn)
+            legs.append(("ici", (dn * dpn, d), hops))
+        return legs
+
+    # ------------------------------------------------------------------
+    # transfers
+    # ------------------------------------------------------------------
+
+    def _leg(
+        self,
+        tier: str,
+        port: Tuple,
+        nbytes: int,
+        ready_ns: float,
+        hops: int,
+        bw: float,
+        lat: float,
+    ) -> float:
+        """Serialize one burst on ``port`` (FIFO behind its previous burst)
+        and propagate it ``hops`` hops; returns the leg's arrival time."""
+        start = max(ready_ns, self._busy_until_ns.get(port, 0.0))
+        ser_ns = nbytes / bw
+        self._busy_until_ns[port] = start + ser_ns
+        queued = start - ready_ns
+        self.stats["queued_ns"] += queued
+        self.stats[tier + "_messages"] += 1
+        self.stats[tier + "_bytes"] += nbytes
+        self.stats[tier + "_queued_ns"] += queued
+        return start + ser_ns + hops * lat
+
     def transfer(self, src: int, dst: int, nbytes: int, issue_ns: float) -> float:
         """Arrival time (ns) of an ``nbytes`` burst issued at ``issue_ns``.
 
-        Mutates the egress-port busy state (contention) and returns when the
-        burst becomes *deliverable* at the destination directory.
+        Mutates the traversed egress ports' busy state (contention) and
+        returns when the burst becomes *deliverable* at the destination
+        directory.
         """
-        hops, direction = self.route(src, dst)
-        port = (src, direction)
-        start = max(issue_ns, self._busy_until_ns.get(port, 0.0))
-        ser_ns = max(0, nbytes) / self.link_bw_bytes_per_ns
-        self._busy_until_ns[port] = start + ser_ns
+        self._check(src, dst)
+        nb = max(0, nbytes)
         self.stats["messages"] += 1
-        self.stats["bytes"] += max(0, nbytes)
-        self.stats["queued_ns"] += start - issue_ns
-        return start + ser_ns + hops * self.hop_latency_ns
+        self.stats["bytes"] += nb
+        dpn = self.devices_per_node
+        sn, sl = divmod(src, dpn)
+        dn, dl = divmod(dst, dpn)
+        ici_bw = self.link_bw_bytes_per_ns
+        ici_lat = self.hop_latency_ns
+        if sn == dn:
+            hops, d = self._ring_route(sl, dl, dpn)
+            return self._leg("ici", (src, d), nb, issue_ns, hops, ici_bw, ici_lat)
+        t = issue_ns
+        if sl != 0:
+            hops, d = self._ring_route(sl, 0, dpn)
+            t = self._leg("ici", (src, d), nb, t, hops, ici_bw, ici_lat)
+        nhops, nd = self._ring_route(sn, dn, self.n_nodes)
+        t = self._leg(
+            "dci",
+            ("dci", sn, nd),
+            nb,
+            t,
+            nhops,
+            self.dci_link_bw_bytes_per_ns,
+            self.dci_hop_latency_ns,
+        )
+        if dl != 0:
+            hops, d = self._ring_route(0, dl, dpn)
+            t = self._leg("ici", (dn * dpn, d), nb, t, hops, ici_bw, ici_lat)
+        return t
+
+    def transfer_batch(
+        self,
+        src: int,
+        dsts: Sequence[int],
+        nbytes: Sequence[int],
+        issue_ns: float,
+    ) -> List[float]:
+        """Arrival times of ``len(dsts)`` bursts all issued by ``src`` at
+        ``issue_ns`` — bit-identical to calling :meth:`transfer` once per
+        destination in order, but priced per egress port in one vectorized
+        pass.
+
+        This is the ``all_to_all`` incast shape: a completing dispatch phase
+        emits one burst to every peer at the same cycle, O(devices) messages
+        per call and O(devices^2) per simulation, which per-message python
+        routing made the closed-loop bottleneck.  Same-issue bursts on one
+        egress port serialize back-to-back, so each port's queue is a prefix
+        sum over its bursts' serialization times — computed here with one
+        cumulative sum per port instead of a python transition per message.
+        Cross-node batches fall back to the per-message path (their legs
+        couple ports in issue order).
+        """
+        if len(dsts) != len(nbytes):
+            raise ValueError("dsts and nbytes length mismatch")
+        if (
+            len(dsts) < 16  # numpy setup costs more than it saves
+            or (
+                self.n_nodes > 1
+                and any(self.node_of(d) != self.node_of(src) for d in dsts)
+            )
+        ):
+            return [
+                self.transfer(src, d, nb, issue_ns)
+                for d, nb in zip(dsts, nbytes)
+            ]
+        import numpy as np
+
+        dpn = self.devices_per_node
+        sl = src % dpn
+        bw = self.link_bw_bytes_per_ns
+        lat = self.hop_latency_ns
+        arrivals = [0.0] * len(dsts)
+        queued = [0.0] * len(dsts)
+        # group by egress port (only two directions exist for one source),
+        # preserving per-port emission order
+        by_port: Dict[Tuple, Tuple[List[int], List[int], List[int]]] = {}
+        for i, (dst, nb) in enumerate(zip(dsts, nbytes)):
+            self._check(src, dst)
+            hops, d = self._ring_route(sl, dst % dpn, dpn)
+            idxs, hlist, blist = by_port.setdefault((src, d), ([], [], []))
+            idxs.append(i)
+            hlist.append(hops)
+            blist.append(max(0, nb))
+        for port, (idxs, hlist, blist) in by_port.items():
+            b0 = self._busy_until_ns.get(port, 0.0)
+            start0 = max(issue_ns, b0)
+            # busy_k after burst k: start0 + ser_1 + ... + ser_k, accumulated
+            # sequentially (np.cumsum) so each float add matches the loop
+            chain = np.empty(len(idxs) + 1, dtype=np.float64)
+            chain[0] = start0
+            np.divide(blist, bw, out=chain[1:])
+            busy = np.cumsum(chain)
+            self._busy_until_ns[port] = float(busy[-1])
+            # start of burst k is busy_{k-1}; arrival adds the hop latency
+            for j, i in enumerate(idxs):
+                arrivals[i] = float(busy[j + 1]) + hlist[j] * lat
+                queued[i] = float(busy[j]) - issue_ns
+        # totals accumulate in emission order, matching the sequential path's
+        # float-add sequence exactly
+        st = self.stats
+        for i, nb in enumerate(nbytes):
+            nb = max(0, nb)
+            st["messages"] += 1
+            st["bytes"] += nb
+            st["queued_ns"] += queued[i]
+            st["ici_messages"] += 1
+            st["ici_bytes"] += nb
+            st["ici_queued_ns"] += queued[i]
+        return arrivals

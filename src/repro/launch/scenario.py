@@ -10,6 +10,9 @@ Usage:
       --sweep skew_ns=0,2000,8000 --sweep n_egpus=3,7 --csv /tmp/sweep.csv
   PYTHONPATH=src python -m repro.launch.scenario --scenario ring_allreduce \
       --devices 8 --detailed all
+  PYTHONPATH=src python -m repro.launch.scenario \
+      --scenario hierarchical_allreduce --devices 16 --nodes 4 \
+      --dci-bw 6.25 --detailed all
 
 ``-p/--param key=value`` sets a scenario constructor parameter or a SimConfig
 field for a single run; ``--sweep key=v1,v2,...`` builds a grid handled by
@@ -22,6 +25,10 @@ device to a program-driven detailed device in one closed simulation loop
 (``closed_loop=True`` — flags are emitted over the fabric instead of
 pre-scheduled), while the default ``--detailed 0`` keeps the open-loop
 single-detailed-device replay.
+
+``--nodes K`` splits the devices into K nodes (``devices_per_node = N / K``):
+intra-node hops ride the ICI tier, inter-node hops the per-node DCI uplinks.
+``--ici-bw`` / ``--dci-bw`` override the per-tier link bandwidths in GB/s.
 """
 
 from __future__ import annotations
@@ -99,6 +106,14 @@ def main(argv=None) -> int:
                     choices=[s.value for s in SyncPolicy])
     ap.add_argument("--devices", type=int, default=None, metavar="N",
                     help="total device count (sets n_egpus = N - 1)")
+    ap.add_argument("--nodes", type=int, default=None, metavar="K",
+                    help="group the devices into K nodes (devices_per_node = "
+                         "N / K); intra-node traffic rides ICI, inter-node "
+                         "traffic the per-node DCI uplinks")
+    ap.add_argument("--ici-bw", type=float, default=None, metavar="GBPS",
+                    help="intra-node (ICI) link bandwidth override, GB/s")
+    ap.add_argument("--dci-bw", type=float, default=None, metavar="GBPS",
+                    help="inter-node (DCI) link bandwidth override, GB/s")
     ap.add_argument("--detailed", default="0", choices=["0", "all"],
                     help="'all': closed-loop cluster, every device detailed; "
                          "'0': open-loop replay with one detailed device")
@@ -133,6 +148,23 @@ def main(argv=None) -> int:
     sc_params = {k: v for k, v in params.items() if k not in _CFG_FIELDS}
     if args.detailed == "all":
         sc_params["closed_loop"] = True
+    if args.nodes is not None:
+        if args.devices is None or args.devices % args.nodes:
+            raise SystemExit(
+                f"error: --nodes {args.nodes} needs --devices divisible by it"
+            )
+        sc_params.setdefault("devices_per_node", args.devices // args.nodes)
+    if args.ici_bw is not None or args.dci_bw is not None:
+        from dataclasses import replace as _replace
+
+        from repro.core.topology import V5E
+
+        hw = sc_params.get("hw", V5E)
+        if args.ici_bw is not None:
+            hw = _replace(hw, ici_link_bw=args.ici_bw * 1e9)
+        if args.dci_bw is not None:
+            hw = _replace(hw, dci_link_bw=args.dci_bw * 1e9)
+        sc_params["hw"] = hw
     try:
         base_cfg = SimConfig(sync=SyncPolicy(args.sync), **cfg_over)
         if args.devices is not None:

@@ -24,7 +24,12 @@ from repro.core.scenarios.ring_allreduce import RingAllReduceScenario
 
 FAST = SimConfig(workgroups=12, n_cus=4)
 
-CLOSED_LOOP = ("ring_allreduce", "all_to_all", "pipeline_p2p")
+CLOSED_LOOP = (
+    "ring_allreduce",
+    "all_to_all",
+    "pipeline_p2p",
+    "hierarchical_allreduce",
+)
 
 
 def _segments_key(report):
@@ -361,8 +366,10 @@ def test_cohort_interpreter_matches_singleton_interpreter(name):
 
 def test_cohorts_group_dispatch_waves():
     """Workgroups sharing (dispatch cycle, phase program) collapse into one
-    cohort per wave under SPIN; SyncMon falls back to singletons (requeue
-    jitter and CU-keyed wake coalescing are per-workgroup)."""
+    cohort per wave under SPIN; SyncMon batches by requeue-jitter class, which
+    under the default config (jitter mod > wave width, staggered waves) leaves
+    every class a singleton — see tests/test_hierarchy.py for configs where
+    the classes genuinely batch."""
     cfg = FAST.with_(engine=EngineKind.EVENT)
     sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
     cluster = Cluster(cfg, sc)

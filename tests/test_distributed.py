@@ -116,6 +116,46 @@ print("OK")
     assert "OK" in out
 
 
+def test_sharded_train_step_bf16_across_mesh_shapes():
+    """The fp32 cross-mesh determinism above, in bf16: the same init + batch
+    must give matching losses on (1,1), (2,4), and (4,2) meshes with bf16
+    params (ROADMAP open item — the partitionable-threefry fix was only
+    exercised at fp32).  bf16 accumulates rounding differently per sharding,
+    so the tolerance is bf16-sized rather than exact."""
+    out = run_devices(
+        """
+import jax, jax.numpy as jnp
+from repro.models import Model, ModelConfig
+from repro.training import TrainConfig, build_train_step
+from repro.optim import AdamWConfig, adamw_init
+
+cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                  vocab=128, param_dtype=jnp.bfloat16)
+tok = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 128)
+lab = jnp.roll(tok, -1, axis=1)
+losses = []
+for dims in ((1, 1), (2, 4), (4, 2)):
+    mesh = jax.make_mesh(dims, ("data", "model"))
+    model = Model(cfg, mesh=mesh)
+    tcfg = TrainConfig(optim=AdamWConfig(lr=1e-3), donate_state=False)
+    step, sh, fb = build_train_step(model, mesh, tcfg)
+    with mesh:
+        params = jax.jit(model.init, out_shardings=sh["params"])(
+            jax.random.PRNGKey(0))
+        assert all(p.dtype == jnp.bfloat16 for p in jax.tree.leaves(params))
+        state = jax.jit(lambda p: adamw_init(p, tcfg.optim),
+                        out_shardings=sh["state"])(params)
+        p2, s2, metrics = step(params, state, tok, lab)
+    losses.append(float(metrics["loss"]))
+print("losses", losses)
+spread = max(losses) - min(losses)
+assert spread < 0.05, (losses, spread)
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
 def test_indivisible_dims_fall_back_to_replication():
     """minicpm3's vocab (73448) is not divisible by a 16-way model axis:
     those tensors must fall back to replication (recorded), not crash —

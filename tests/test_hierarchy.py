@@ -1,0 +1,431 @@
+"""Tiered intra/inter-node fabric tests: leg composition and per-tier
+contention, flat-configuration bit-identity with the classic single-ring
+model, vectorized incast pricing, the hierarchical_allreduce scenario
+(cycle/event bit-identity at 4 nodes x 4 devices/node, DCI-bandwidth
+sensitivity confined to the leader stage), SyncMon jitter-class cohorts, and
+the nodes=/devices_per_node= plumbing."""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (
+    Cluster,
+    EngineKind,
+    FabricModel,
+    SimConfig,
+    SweepRunner,
+    SyncPolicy,
+    Topology,
+    get_scenario,
+    simulate,
+)
+from repro.core.topology import V5E
+
+FAST = SimConfig(workgroups=12, n_cus=4)
+
+# small payload keeps the 16-device cycle-engine runs fast
+HIER = dict(payload_bytes=1 << 16, writes_per_step=2)
+
+
+def _segments_key(report):
+    return sorted(
+        (s.device, s.wg, s.phase, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in report.segments
+    )
+
+
+def _phase_segments(report, phase):
+    return sorted(
+        (s.device, s.wg, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in report.segments
+        if s.phase == phase
+    )
+
+
+def _phase_span(report, phase):
+    return sum(
+        s.end_ns - s.start_ns for s in report.segments if s.phase == phase
+    )
+
+
+# ---------------------------------------------------------------------------
+# Topology tier helpers
+# ---------------------------------------------------------------------------
+
+
+def test_topology_tier_helpers():
+    flat = Topology.flat_ring(8)
+    assert flat.n_chips == 8 and flat.n_nodes == 1
+    assert flat.devices_per_node == 8 and flat.dci_axes == ()
+
+    two = Topology.two_tier(4, 4)
+    assert two.n_chips == 16
+    assert two.n_nodes == 4 and two.devices_per_node == 4
+    assert "DCI" in two.describe()
+
+    assert Topology.for_devices(16, 4).n_nodes == 4
+    assert Topology.for_devices(16, None).n_nodes == 1
+    assert Topology.for_devices(16, 99).n_nodes == 1  # dpn >= n -> flat
+    with pytest.raises(ValueError):
+        Topology.for_devices(16, 5)  # not divisible
+
+
+def test_fabric_from_topology():
+    f = FabricModel.from_topology(Topology.two_tier(2, 4))
+    assert f.n_devices == 8 and f.n_nodes == 2 and f.devices_per_node == 4
+    flat = FabricModel.from_topology(Topology.flat_ring(6))
+    assert flat.n_nodes == 1 and flat.devices_per_node == 6
+
+
+# ---------------------------------------------------------------------------
+# tiered routing and contention
+# ---------------------------------------------------------------------------
+
+
+def test_route_legs_composition():
+    f = FabricModel(8, devices_per_node=4)
+    # same node: one ICI leg
+    assert f.route_legs(1, 3) == [("ici", (1, 1), 2)]
+    # cross node from a non-gateway to a non-gateway: all three legs
+    legs = f.route_legs(1, 6)
+    assert [leg[0] for leg in legs] == ["ici", "dci", "ici"]
+    (t0, p0, h0), (t1, p1, h1), (t2, p2, h2) = legs
+    assert p0 == (1, -1) and h0 == 1          # 1 -> gateway 0
+    assert p1 == ("dci", 0, 1) and h1 == 1    # node 0 -> node 1 uplink
+    assert p2 == (4, 1) and h2 == 2           # gateway 4 -> 6
+    # gateway-to-gateway: pure DCI
+    assert f.route_legs(0, 4) == [("dci", ("dci", 0, 1), 1)]
+    # route() is the intra-ring helper and rejects cross-node pairs
+    assert f.route(1, 3) == (2, +1)
+    with pytest.raises(ValueError):
+        f.route(1, 6)
+    with pytest.raises(ValueError):
+        f.route(0, 0)
+
+
+def test_tiered_transfer_composes_and_queues_on_uplink():
+    f = FabricModel(
+        8,
+        devices_per_node=4,
+        hop_latency_ns=10.0,
+        link_bw_bytes_per_ns=10.0,
+        dci_hop_latency_ns=100.0,
+        dci_link_bw_bytes_per_ns=1.0,
+    )
+    # 1 -> 6: ICI leg (10 ser + 10 lat) -> DCI leg (100 ser + 100 lat)
+    #         -> ICI leg (10 ser + 2 x 10 lat)
+    assert f.transfer(1, 6, 100, 0.0) == pytest.approx(250.0)
+    # 0 -> 4 afterwards: no intra legs, but the node-0 uplink is busy until
+    # 120 ns, so the burst queues behind it
+    assert f.transfer(0, 4, 100, 0.0) == pytest.approx(320.0)
+    assert f.stats["messages"] == 2
+    assert f.stats["dci_messages"] == 2
+    assert f.stats["ici_messages"] == 2
+    assert f.stats["dci_queued_ns"] == pytest.approx(120.0)
+    # the opposite uplink direction is a distinct port: no queueing
+    f2 = FabricModel(
+        12,
+        devices_per_node=4,
+        hop_latency_ns=10.0,
+        link_bw_bytes_per_ns=10.0,
+        dci_hop_latency_ns=100.0,
+        dci_link_bw_bytes_per_ns=1.0,
+    )
+    a = f2.transfer(0, 4, 100, 0.0)   # node 0 -> 1, +1 uplink
+    b = f2.transfer(0, 8, 100, 0.0)   # node 0 -> 2, -1 uplink (shortest)
+    assert a == pytest.approx(200.0)  # 100 ser + 100 lat, no intra legs
+    assert b == pytest.approx(200.0)  # no queue: other uplink direction
+
+
+def test_flat_configuration_is_the_classic_ring():
+    """devices_per_node >= n_devices must reproduce the single-ring model
+    exactly — same routes, same arrivals, same contention."""
+    import random
+
+    rng = random.Random(42)
+    f_default = FabricModel(6, hop_latency_ns=100.0, link_bw_bytes_per_ns=1.0)
+    f_flat = FabricModel(
+        6, devices_per_node=6, hop_latency_ns=100.0, link_bw_bytes_per_ns=1.0
+    )
+    assert f_default.n_nodes == f_flat.n_nodes == 1
+    for _ in range(500):
+        s, d = rng.randrange(6), rng.randrange(6)
+        if s == d:
+            continue
+        nb = rng.randrange(0, 4096)
+        t = rng.random() * 1e4
+        assert f_default.transfer(s, d, nb, t) == f_flat.transfer(s, d, nb, t)
+    assert f_default.stats == f_flat.stats
+    # DCI knobs are inert in the flat configuration
+    f_slow_dci = FabricModel(
+        6,
+        hop_latency_ns=100.0,
+        link_bw_bytes_per_ns=1.0,
+        dci_link_bw_bytes_per_ns=1e-6,
+    )
+    f_ref = FabricModel(6, hop_latency_ns=100.0, link_bw_bytes_per_ns=1.0)
+    assert f_slow_dci.transfer(0, 3, 300, 0.0) == f_ref.transfer(0, 3, 300, 0.0)
+
+
+def test_transfer_batch_bit_identical_to_sequential():
+    """The vectorized same-issue incast pricing must match per-message calls
+    exactly — arrivals and stats — in flat and tiered shapes, above and below
+    the numpy cutoff."""
+    import random
+
+    rng = random.Random(7)
+    for n, dpn in ((24, None), (8, None), (24, 6), (24, 1)):
+        kw = dict(
+            devices_per_node=dpn,
+            hop_latency_ns=3.0,
+            link_bw_bytes_per_ns=0.25,
+            dci_hop_latency_ns=55.0,
+            dci_link_bw_bytes_per_ns=0.03,
+        )
+        f_seq, f_bat = FabricModel(n, **kw), FabricModel(n, **kw)
+        for _ in range(20):
+            src = rng.randrange(n)
+            dsts = [d for d in range(n) if d != src]
+            rng.shuffle(dsts)
+            nbs = [rng.randrange(0, 8192) for _ in dsts]
+            t = rng.random() * 1e5
+            seq = [f_seq.transfer(src, d, nb, t) for d, nb in zip(dsts, nbs)]
+            assert f_bat.transfer_batch(src, dsts, nbs, t) == seq
+        assert f_seq.stats == f_bat.stats, (n, dpn)
+
+
+# ---------------------------------------------------------------------------
+# closed-loop scenarios on a tiered fabric
+# ---------------------------------------------------------------------------
+
+
+def test_flat_closed_loop_unchanged_by_explicit_devices_per_node():
+    """A closed-loop run with devices_per_node == n_devices is the committed
+    flat behaviour, bit for bit."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    base = simulate("ring_allreduce", cfg, devices=4, closed_loop=True)
+    flat = simulate(
+        "ring_allreduce", cfg, devices=4, closed_loop=True, devices_per_node=4
+    )
+    assert base.traffic == flat.traffic
+    assert base.kernel_span_ns == flat.kernel_span_ns
+    assert _segments_key(base) == _segments_key(flat)
+
+
+def test_tiered_ring_allreduce_crosses_the_uplinks():
+    """Grouping a closed-loop ring into nodes routes the node-boundary steps
+    over DCI: slower uplinks stretch the kernel, and the DCI tier carries
+    exactly the boundary messages."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    flat = simulate("ring_allreduce", cfg, devices=8, closed_loop=True)
+    tier = simulate(
+        "ring_allreduce", cfg, devices=8, closed_loop=True, devices_per_node=4
+    )
+    assert tier.meta["n_nodes"] == 2 and tier.meta["devices_per_node"] == 4
+    assert tier.meta["fabric"]["dci_messages"] > 0
+    # structural counters can't move: same programs, same flags
+    assert tier.traffic["nonflag_reads"] == flat.traffic["nonflag_reads"]
+    assert tier.wtt_enacted == flat.wtt_enacted
+    # the DCI tier is slower than ICI, so the closed loop takes longer
+    assert tier.kernel_span_ns > flat.kernel_span_ns
+
+
+@pytest.mark.parametrize("sync", [SyncPolicy.SPIN, SyncPolicy.SYNCMON])
+def test_hierarchical_allreduce_bit_identical_at_4x4(sync):
+    """The acceptance case: 4 nodes x 4 devices/node, cycle and event engines
+    bit-for-bit."""
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(sync=sync, engine=eng)
+        reports[eng] = simulate(
+            "hierarchical_allreduce", cfg, nodes=4, devices_per_node=4, **HIER
+        )
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.n_devices == b.n_devices == 16
+    assert a.traffic == b.traffic
+    assert a.per_device == b.per_device
+    assert a.kernel_span_ns == pytest.approx(b.kernel_span_ns)
+    assert _segments_key(a) == _segments_key(b)
+    assert a.monitor_stats == b.monitor_stats
+
+
+def test_hierarchical_allreduce_stage_roles():
+    """Leaders run the inter-node ring; non-leaders hand off and wait for the
+    broadcast; everyone reduce-scatters locally."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    r = simulate(
+        "hierarchical_allreduce", cfg, nodes=4, devices_per_node=4, **HIER
+    )
+    by_dev = {}
+    for s in r.segments:
+        by_dev.setdefault(s.device, set()).add(s.phase)
+    leaders = {d for d in range(16) if d % 4 == 0}
+    for d in range(16):
+        assert "hrs_send" in by_dev[d], d
+        assert "hbc_read" in by_dev[d], d
+        if d in leaders:
+            assert "hir_send" in by_dev[d], d
+            assert "hbc_wait" not in by_dev[d], d
+        else:
+            assert "hrs_handoff" in by_dev[d], d
+            assert "hbc_wait" in by_dev[d], d
+            assert not any(p.startswith("hir") for p in by_dev[d]), d
+    # inter-leader steps ride the DCI uplinks
+    assert r.meta["fabric"]["dci_messages"] > 0
+
+
+def test_halving_dci_bandwidth_moves_only_leader_stage_waits():
+    """The headline demonstration: a slower DCI tier lengthens the leader
+    ring-stage waits (and the broadcast waits that straddle it) while the
+    intra-node reduce-scatter stage is untouched — segments bit-identical,
+    structural counters unchanged."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    slow_hw = replace(V5E, dci_link_bw=V5E.dci_link_bw / 2)
+    base = simulate(
+        "hierarchical_allreduce", cfg, nodes=4, devices_per_node=4, **HIER
+    )
+    slow = simulate(
+        "hierarchical_allreduce",
+        cfg,
+        nodes=4,
+        devices_per_node=4,
+        hw=slow_hw,
+        **HIER,
+    )
+    # intra-node stage: identical timelines and counters
+    for phase in ("hrs_send", "hrs_reduce", "hrs_handoff", "hrs_wait"):
+        assert _phase_segments(base, phase) == _phase_segments(slow, phase), phase
+    for d in range(16):
+        assert (
+            base.per_device[d]["nonflag_reads"]
+            == slow.per_device[d]["nonflag_reads"]
+        )
+    # leader stage: waits lengthen, and with them the whole kernel
+    assert _phase_span(slow, "hir_wait") > _phase_span(base, "hir_wait")
+    assert _phase_span(slow, "hbc_wait") > _phase_span(base, "hbc_wait")
+    assert slow.kernel_span_ns > base.kernel_span_ns
+    # under SPIN the longer waits surface as extra flag reads
+    assert slow.flag_reads > base.flag_reads
+
+
+def test_hierarchical_allreduce_flat_degenerates_to_single_node():
+    """Without a node split the scenario is intra-node only: no DCI traffic,
+    no leader ring."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    r = simulate("hierarchical_allreduce", cfg, devices=4, **HIER)
+    assert r.meta["n_nodes"] == 1
+    assert r.meta["fabric"]["dci_messages"] == 0
+    assert not any(s.phase.startswith("hir") for s in r.segments)
+
+
+def test_hierarchical_allreduce_rejects_open_loop_and_bad_shape():
+    with pytest.raises(ValueError):
+        get_scenario("hierarchical_allreduce")(FAST, closed_loop=False)
+    with pytest.raises(ValueError):
+        simulate("hierarchical_allreduce", FAST, devices=6, devices_per_node=4)
+
+
+# ---------------------------------------------------------------------------
+# nodes= / devices_per_node= plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_shape_knobs_resolve_and_validate():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    a = simulate("hierarchical_allreduce", cfg, nodes=2, devices_per_node=4,
+                 **HIER)
+    b = simulate("hierarchical_allreduce", cfg, devices=8, nodes=2, **HIER)
+    c = simulate("hierarchical_allreduce", cfg, devices=8, devices_per_node=4,
+                 **HIER)
+    assert a.n_devices == b.n_devices == c.n_devices == 8
+    assert a.traffic == b.traffic == c.traffic
+    with pytest.raises(ValueError):
+        simulate("hierarchical_allreduce", cfg, devices=8, nodes=3)
+    with pytest.raises(ValueError):
+        simulate("hierarchical_allreduce", cfg, nodes=2)  # shape underdetermined
+    with pytest.raises(ValueError):
+        simulate(
+            "hierarchical_allreduce", cfg, devices=16, nodes=2,
+            devices_per_node=4,  # 2 x 4 != 16
+        )
+
+
+def test_sweep_runner_nodes_axis():
+    runner = SweepRunner(
+        "hierarchical_allreduce", FAST, engines=(EngineKind.EVENT,)
+    )
+    points = runner.run(
+        devices=[16], nodes=[1, 4], payload_bytes=[1 << 16]
+    )
+    assert len(points) == 2
+    assert [p.params["devices_per_node"] for p in points] == [16, 4]
+    flat, tiered = points
+    assert (
+        tiered.report.meta["fabric"]["dci_messages"]
+        > flat.report.meta["fabric"]["dci_messages"] == 0
+    )
+
+
+def test_cluster_rejects_mismatched_topology():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
+    with pytest.raises(ValueError):
+        Cluster(cfg, sc, topology=Topology.two_tier(4, 4))  # 16 != 4 devices
+
+
+# ---------------------------------------------------------------------------
+# SyncMon jitter-class cohorts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mod,stagger",
+    [(16, 8), (2, 8), (1, 0), (4, 0)],
+)
+@pytest.mark.parametrize("name", ["ring_allreduce", "hierarchical_allreduce"])
+def test_syncmon_class_cohorts_match_singletons(name, mod, stagger):
+    """Jitter-class cohorts must be bit-identical to the per-workgroup
+    interpreter: traffic, per-device breakdown, monitor stats, timelines."""
+    cfg = FAST.with_(
+        sync=SyncPolicy.SYNCMON,
+        engine=EngineKind.EVENT,
+        requeue_jitter_mod=mod,
+        dispatch_stagger_cycles=stagger,
+    )
+    reports = {}
+    n_cohorts = {}
+    for cohorts in (True, False):
+        sc = get_scenario(name)(cfg, closed_loop=True)
+        cluster = Cluster(cfg, sc, cohorts=cohorts)
+        n_cohorts[cohorts] = len(cluster.nodes[0].target.cohorts)
+        reports[cohorts] = cluster.run()
+    a, b = reports[True], reports[False]
+    assert a.traffic == b.traffic
+    assert a.per_device == b.per_device
+    assert a.monitor_stats == b.monitor_stats
+    assert a.sim_cycles == b.sim_cycles
+    assert _segments_key(a) == _segments_key(b)
+    # the class split really batches whenever classes repeat
+    expected = min(
+        cfg.workgroups,
+        len({(w // cfg.n_cus * stagger, w % mod) for w in range(cfg.workgroups)}),
+    )
+    assert n_cohorts[True] == expected
+    assert n_cohorts[False] == cfg.workgroups
+
+
+def test_syncmon_class_cohorts_group_members_by_class():
+    cfg = FAST.with_(
+        sync=SyncPolicy.SYNCMON,
+        engine=EngineKind.EVENT,
+        requeue_jitter_mod=4,
+        dispatch_stagger_cycles=0,
+    )
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
+    dev = Cluster(cfg, sc).nodes[0].target
+    assert len(dev.cohorts) == 4  # one per jitter class
+    for c in dev.cohorts:
+        classes = {wg % 4 for wg in c.members}
+        assert len(classes) == 1
+        assert c.member_cus == tuple(wg % cfg.n_cus for wg in c.members)
