@@ -1,21 +1,25 @@
 """Closed-loop multi-device scaling benchmark — the perf trajectory seed.
 
-Sweeps device counts on the event engine for every closed-loop-capable
-scenario — each count in the flat single-tier shape AND a tiered
-intra/inter-node shape (``devices_per_node`` = 2 below 16 devices, 4 from 16
-up) — and records simulated span, aggregate traffic, and wall time, so
-future performance PRs have a multi-device baseline to compare against
-(`BENCH_multi_device.json`).  A cross-engine spot check at the smallest
-device count (both shapes) guards the cycle/event bit-identity on every
-benchmark run.
+Sweeps scenarios x fabric shapes on the event engine for every
+closed-loop-capable scenario: each device count runs in the flat single-tier
+shape, a tiered intra/inter-node shape (``devices_per_node`` = 2 below 16
+devices, 4 from 16 up), AND — same node split — on the ``fat_tree`` and
+``rail_optimized`` interconnect presets, recording simulated span, aggregate
+traffic, and wall time, so future performance PRs have a multi-device
+baseline to compare against (`BENCH_multi_device.json`).  A cross-engine
+spot check at the smallest device count (all shapes) guards the cycle/event
+bit-identity on every benchmark run.
 
 ``--check BASELINE.json`` turns the run into a regression guard: for every
 row that also exists in the baseline (same scenario/devices/devices_per_node/
-engine/sync/workgroups; rows predating the tiered fabric count as flat) the
-traffic counters must match bit-for-bit and wall time must not regress
-beyond ``--wall-factor`` (default 2x) — counters drifting means the
-simulation physics changed, wall regressing means someone broke the cohort
-interpreter, the event calendar, or the tiered router.
+fabric/engine/sync/workgroups; rows predating the tiered fabric count as
+flat, rows predating the pluggable fabric as preset-less) the traffic
+counters must match bit-for-bit and wall time must not regress beyond
+``--wall-factor`` (default 2x) — counters drifting means the simulation
+physics changed, wall regressing means someone broke the cohort interpreter,
+the event calendar, or the fabric router.  The guard also requires at least
+one matched ``fat_tree`` and one matched ``rail_optimized`` row, so the
+graph-based presets can never silently fall out of coverage.
 
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
      [--quick] [--devices 4,8,...] [--repeats N]
@@ -37,6 +41,10 @@ CLOSED_LOOP_SCENARIOS = (
     "pipeline_p2p",
     "hierarchical_allreduce",
 )
+
+# graph-based interconnect presets swept (with the tiered node split) in
+# addition to the legacy flat/two_tier shapes
+FABRIC_PRESETS = ("fat_tree", "rail_optimized")
 
 # the simulation-physics outputs that must never drift between runs
 COUNTER_KEYS = (
@@ -60,9 +68,11 @@ def _row_key(row: dict) -> tuple:
     return (
         row["scenario"],
         row["devices"],
-        # rows written before the tiered fabric carry no shape field; they
-        # were flat by construction
+        # rows written before the tiered fabric carry no shape field (they
+        # were flat by construction); rows predating the pluggable fabric
+        # carry no preset name (topology-derived ring/two_tier)
         row.get("devices_per_node"),
+        row.get("fabric"),
         row["engine"],
         row["sync"],
         row["workgroups"],
@@ -83,14 +93,16 @@ def check_against_baseline(
         baseline = {_row_key(r): r for r in json.load(f)["rows"]}
     failures = []
     matched = 0
+    matched_fabrics = set()
     for row in rows:
         base = baseline.get(_row_key(row))
         if base is None:
             continue
         matched += 1
+        matched_fabrics.add(row.get("fabric"))
         where = (
             f"{row['scenario']} devices={row['devices']} "
-            f"dpn={row.get('devices_per_node')}"
+            f"dpn={row.get('devices_per_node')} fabric={row.get('fabric')}"
         )
         for k in COUNTER_KEYS:
             if row[k] != base[k]:
@@ -106,6 +118,15 @@ def check_against_baseline(
             f"no rows matched the baseline {baseline_path} — check devices/"
             "workgroups flags"
         )
+    for preset in FABRIC_PRESETS:
+        if any(r.get("fabric") == preset for r in rows) and (
+            preset not in matched_fabrics
+        ):
+            failures.append(
+                f"no {preset!r} row matched the baseline {baseline_path} — "
+                "the fabric-preset guard lost coverage (regenerate the "
+                "baseline?)"
+            )
     return failures
 
 
@@ -146,23 +167,31 @@ def main() -> None:
         engine=EngineKind.EVENT,
     )
 
+    def shapes_for(nd: int):
+        """(devices_per_node, fabric) shapes one device count runs in: flat,
+        two-tier, and each graph-based preset on the tiered node split."""
+        out = [(None, None), (tiered_dpn(nd), None)]
+        out.extend((tiered_dpn(nd), f) for f in FABRIC_PRESETS)
+        return [(dpn, fab) for dpn, fab in out
+                if dpn is None or nd % dpn == 0]
+
     rows = []
-    print(f"{'scenario':22s} {'devices':>7s} {'dpn':>4s} {'span_ns':>12s} "
-          f"{'flag_reads':>11s} {'wtt_enacted':>11s} {'wall_ms':>9s}")
+    print(f"{'scenario':22s} {'devices':>7s} {'dpn':>4s} {'fabric':>15s} "
+          f"{'span_ns':>12s} {'flag_reads':>11s} {'wtt_enacted':>11s} "
+          f"{'wall_ms':>9s}")
     for name in CLOSED_LOOP_SCENARIOS:
         for nd in device_counts:
-            for dpn in (None, tiered_dpn(nd)):
-                if dpn is not None and nd % dpn:
-                    continue
+            for dpn, fab in shapes_for(nd):
                 best = None
                 for _ in range(max(1, args.repeats)):
                     r = simulate(name, base, devices=nd, closed_loop=True,
-                                 devices_per_node=dpn,
+                                 devices_per_node=dpn, fabric=fab,
                                  collect_segments=False)
                     row = {
                         "scenario": name,
                         "devices": nd,
                         "devices_per_node": dpn,
+                        "fabric": fab,
                         "engine": r.engine,
                         "sync": r.sync,
                         "workgroups": base.workgroups,
@@ -183,6 +212,7 @@ def main() -> None:
                         best = row
                 rows.append(best)
                 print(f"{name:22s} {nd:>7d} {dpn or '-':>4} "
+                      f"{fab or '-':>15s} "
                       f"{best['kernel_span_ns']:>12,.0f} "
                       f"{best['flag_reads']:>11,} {best['wtt_enacted']:>11,} "
                       f"{best['wall_time_s'] * 1e3:>9.2f}")
@@ -202,21 +232,19 @@ def main() -> None:
     else:
         spot_scenarios = CLOSED_LOOP_SCENARIOS
     for name in spot_scenarios:
-        for dpn in (None, tiered_dpn(nd)):
-            if dpn is not None and nd % dpn:
-                continue
+        for dpn, fab in shapes_for(nd):
             pair = {}
             for eng in (EngineKind.CYCLE, EngineKind.EVENT):
                 r = simulate(name, base.with_(engine=eng), devices=nd,
                              closed_loop=True, devices_per_node=dpn,
-                             collect_segments=False)
+                             fabric=fab, collect_segments=False)
                 pair[eng.value] = (
                     r.flag_reads, r.nonflag_reads, r.kernel_span_ns
                 )
             if pair["cycle"] != pair["event"]:
                 agree = False
                 print(f"[bench] ENGINE MISMATCH {name} devices={nd} "
-                      f"dpn={dpn}: {pair}")
+                      f"dpn={dpn} fabric={fab}: {pair}")
     print(f"[bench] multi_device {'PASS' if agree else 'FAIL'} "
           f"({len(rows)} rows)")
 

@@ -5,6 +5,17 @@ first-class feature of the training framework."""
 from .cluster import Cluster, ClusterNode
 from .config import EngineKind, SimConfig, SyncPolicy
 from .events import PHASES, RegisteredWrite, Segment, TraceBundle, register_phase
+from .interconnect import (
+    InterconnectSpec,
+    Leg,
+    LinkClass,
+    RoutingPolicy,
+    build_fabric,
+    get_fabric,
+    list_fabrics,
+    register_fabric,
+    resolve_fabric,
+)
 from .memory import AddressMap, DirectoryMemory, TrafficCounters
 from .monitor import MonitorEntry, MonitorLog
 from .perturb import GaussianPerturb, NullPerturb, PeerDelayPerturb
@@ -40,6 +51,9 @@ __all__ = [
     "EidolaDeadlock", "TargetDevice",
     "Cluster", "ClusterNode",
     "FabricModel", "HardwareSpec", "Topology",
+    "InterconnectSpec", "LinkClass", "Leg", "RoutingPolicy",
+    "build_fabric", "get_fabric", "list_fabrics", "register_fabric",
+    "resolve_fabric",
     "GemvAllReduceWorkload", "make_gemv_allreduce_traces",
     "WriteTrackingTable",
 ]

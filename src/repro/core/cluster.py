@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Union
 from .config import EngineKind, SimConfig, SyncPolicy
 from .engine import CyclePollEngine, EventQueueEngine
 from .events import RegisteredWrite, Segment
+from .interconnect import InterconnectSpec, build_fabric
 from .memory import DirectoryMemory
 from .monitor import MonitorLog
 from .scenario import EmitOp, PhaseSpec, Scenario
@@ -70,12 +71,16 @@ class Cluster:
     by (wg, phase) only) or a mapping ``{device_id: perturb}`` to disturb
     specific ranks — the knob the propagation experiments turn.
 
-    The fabric is derived from the scenario's :class:`Topology` (its
-    ``topology`` attribute, or an explicit ``topology=`` argument): non-DCI
-    axes form the intra-node tier, DCI axes the inter-node tier.  Without a
-    topology the fabric degenerates to the flat single-tier ring over
-    ``cfg.n_devices`` (the pre-tiered behaviour); ``fabric=`` overrides
-    everything.
+    The fabric resolves in priority order: an explicit ``fabric=`` argument
+    (a ready :class:`FabricModel`, an
+    :class:`repro.core.interconnect.InterconnectSpec`, or a registered preset
+    *name* such as ``"fat_tree"``), then the scenario's ``interconnect`` spec
+    (set when it was built with ``fabric=``/link overrides), then the
+    scenario's :class:`Topology` (its ``topology`` attribute, or an explicit
+    ``topology=`` argument: non-DCI axes form the intra-node tier, DCI axes
+    the inter-node tier — the ``ring``/``two_tier`` presets).  Without any of
+    those the fabric degenerates to the flat single-tier ring over
+    ``cfg.n_devices`` (the pre-tiered behaviour).
     """
 
     def __init__(
@@ -85,7 +90,7 @@ class Cluster:
         *,
         perturb: PerturbLike = None,
         collect_segments: bool = True,
-        fabric: Optional[FabricModel] = None,
+        fabric: Union[None, str, InterconnectSpec, FabricModel] = None,
         topology: Optional[Topology] = None,
         cohorts: bool = True,
     ):
@@ -96,7 +101,10 @@ class Cluster:
         self.collect_segments = collect_segments
         topo = topology or getattr(scenario, "topology", None)
         if fabric is None:
-            if topo is not None:
+            spec = getattr(scenario, "interconnect", None)
+            if spec is not None:
+                fabric = FabricModel.from_spec(spec)
+            elif topo is not None:
                 if topo.n_chips != cfg.n_devices:
                     raise ValueError(
                         f"topology spans {topo.n_chips} chips but the cluster "
@@ -107,7 +115,27 @@ class Cluster:
                 fabric = FabricModel(
                     cfg.n_devices, hw=getattr(scenario, "hw", V5E)
                 )
-        elif fabric.n_devices != cfg.n_devices:
+        elif isinstance(fabric, str):
+            # forward the scenario's node split only when it has one; a flat
+            # topology (n_nodes == 1) leaves the preset's own default (e.g.
+            # one-device nodes for fat_tree/rail_optimized) so a named
+            # fabric never silently degenerates to a single node
+            dpn = (
+                topo.devices_per_node
+                if topo is not None and topo.n_nodes > 1
+                else None
+            )
+            fabric = FabricModel.from_spec(
+                build_fabric(
+                    fabric,
+                    cfg.n_devices,
+                    getattr(scenario, "hw", V5E),
+                    devices_per_node=dpn,
+                )
+            )
+        elif isinstance(fabric, InterconnectSpec):
+            fabric = FabricModel.from_spec(fabric)
+        if fabric.n_devices != cfg.n_devices:
             raise ValueError(
                 f"fabric models {fabric.n_devices} devices but the cluster "
                 f"simulates {cfg.n_devices}"
@@ -210,7 +238,9 @@ class Cluster:
         arrival_ns = self.fabric.transfer(
             src, op.dst, op.payload_bytes + op.size, cfg.cycles_to_ns(cycle)
         )
-        self._register_emit(src, op, arrival_ns, cycle)
+        self.nodes[op.dst].wtt.register_many(
+            self._emit_writes(src, op, arrival_ns, cycle)
+        )
 
     def _route_batch(self, src: int, ops: List[EmitOp], cycle: int) -> None:
         """Route all of one completion's emissions in a single fabric pass.
@@ -218,9 +248,12 @@ class Cluster:
         The ``all_to_all`` incast fires O(devices) same-cycle bursts per
         completing dispatch phase (O(devices^2) per run); pricing them with
         :meth:`FabricModel.transfer_batch` replaces that many python routing
-        calls with one cumulative sum per egress port, bit-identical to the
-        sequential path (registration order, seqs, and port FIFO order are
-        all preserved).
+        calls with one cumulative sum per egress port, and the resulting
+        marker+flag writes land per destination through
+        :meth:`WriteTrackingTable.register_many` — one heap restructure and
+        one calendar hook per (source, destination) pair instead of ~9 of
+        each.  Bit-identical to the sequential path: registration order,
+        seqs, per-table reg_nos, and port FIFO order are all preserved.
         """
         cfg = self.cfg
         for op in ops:
@@ -238,13 +271,25 @@ class Cluster:
             [op.payload_bytes + op.size for op in ops],
             cfg.cycles_to_ns(cycle),
         )
+        # writes are built in emission order (Cluster seqs identical to the
+        # per-op path) and grouped per destination WTT; within one table the
+        # batch preserves that order, so reg_nos — the pop tie-break — are
+        # assigned exactly as sequential registration would have
+        per_dst: Dict[int, List[RegisteredWrite]] = {}
         for op, arrival_ns in zip(ops, arrivals):
-            self._register_emit(src, op, arrival_ns, cycle)
+            ws = self._emit_writes(src, op, arrival_ns, cycle)
+            bucket = per_dst.get(op.dst)
+            if bucket is None:
+                per_dst[op.dst] = ws
+            else:
+                bucket.extend(ws)
+        for dst, ws in per_dst.items():
+            self.nodes[dst].wtt.register_many(ws)
 
-    def _register_emit(
+    def _emit_writes(
         self, src: int, op: EmitOp, arrival_ns: float, cycle: int
-    ) -> None:
-        """Register one routed emission (markers + flag) into ``op.dst``,
+    ) -> List[RegisteredWrite]:
+        """The registered writes (markers + flag) of one routed emission,
         enforcing causality: a write emitted at ``cycle`` can never become
         visible in the same cycle (jitter perturbations could otherwise pull
         it into the past, which the two engines would order differently).
@@ -253,11 +298,11 @@ class Cluster:
         arrival_ns += cfg.xgmi_enact_latency_ns
         addr = op.addr if op.addr is not None else self.amap.flag_addr(src, op.slot)
         # per-destination constants hoisted out of the marker loop (the
-        # all_to_all incast registers O(devices^2) marker writes per run)
+        # all_to_all incast builds O(devices^2) marker writes per run)
         p = self._perturb_for(op.dst)
         min_ns = cfg.cycles_to_ns(cycle + 1)
-        register = self.nodes[op.dst].wtt.register
         seq = self._seq
+        out: List[RegisteredWrite] = []
         if cfg.include_data_writes and op.data_writes > 0:
             lead = min(cfg.data_write_lead_ns, arrival_ns)
             t0 = arrival_ns - lead
@@ -278,7 +323,7 @@ class Cluster:
                     w = p.jitter_write(w)
                 if w.wakeup_ns < min_ns:
                     w = replace(w, wakeup_ns=min_ns)
-                register(w)
+                out.append(w)
         w = RegisteredWrite(
             wakeup_ns=arrival_ns,
             addr=addr,
@@ -291,7 +336,8 @@ class Cluster:
             w = p.jitter_write(w)
         if w.wakeup_ns < min_ns:
             w = replace(w, wakeup_ns=min_ns)
-        register(w)
+        out.append(w)
+        return out
 
     # ------------------------------------------------------------------
     # running
@@ -349,6 +395,7 @@ class Cluster:
                 "closed_loop": True,
                 "device_spans_ns": spans,
                 "fabric": dict(self.fabric.stats),
+                "fabric_name": self.fabric.spec.name,
                 "n_nodes": self.fabric.n_nodes,
                 "devices_per_node": self.fabric.devices_per_node,
                 **{f"param_{k}": v for k, v in self.scenario.params.items()},

@@ -32,6 +32,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type, Union
 
 from .config import EngineKind, SimConfig
 from .events import TraceBundle
+from .interconnect import V5E, FabricLike, HardwareSpec, resolve_fabric
 from .memory import AddressMap
 
 __all__ = [
@@ -239,10 +240,51 @@ class Scenario(abc.ABC):
         # ``Topology.for_devices``); the Cluster derives its FabricModel from
         # it.  ``None`` means the flat single-tier ring over cfg.n_devices.
         self.topology = None  # type: ignore[assignment]
+        # Pluggable fabric: scenarios built with ``fabric=``/link overrides
+        # resolve an InterconnectSpec here (see :meth:`_setup_fabric`), which
+        # the Cluster prefers over ``topology``.  ``None`` keeps the legacy
+        # topology-derived ring/two_tier shape.
+        self.interconnect = None  # type: ignore[assignment]
+        self.fabric_name: Optional[str] = None
 
     @classmethod
     def default_amap(cls, cfg: SimConfig) -> AddressMap:
         return AddressMap(n_devices=cfg.n_devices)
+
+    def _setup_fabric(
+        self,
+        *,
+        devices_per_node: Optional[int] = None,
+        hw: HardwareSpec = V5E,
+        fabric: FabricLike = None,
+        link_bw: Optional[Dict[str, float]] = None,
+        link_latency_ns: Optional[Dict[str, float]] = None,
+        **fabric_params,
+    ) -> None:
+        """Resolve the closed-loop fabric: sets ``self.topology`` (the legacy
+        tier-explicit shape) and — when ``fabric`` names a registered preset
+        (e.g. ``"fat_tree"``), is a ready
+        :class:`repro.core.interconnect.InterconnectSpec`, or any per-class
+        link override is given — ``self.interconnect``, which the
+        :class:`repro.core.cluster.Cluster` prefers.  ``link_bw`` maps link
+        class -> bytes/ns (== GB/s); unknown classes raise, listing the
+        fabric's valid ones."""
+        from .topology import Topology  # late import (topology is heavier)
+
+        n = self.cfg.n_devices
+        self.topology = Topology.for_devices(n, devices_per_node, hw=hw)
+        self.interconnect = resolve_fabric(
+            fabric,
+            n,
+            hw,
+            devices_per_node=devices_per_node,
+            link_bw=link_bw,
+            link_latency_ns=link_latency_ns,
+            **fabric_params,
+        )
+        self.fabric_name = (
+            self.interconnect.name if self.interconnect is not None else None
+        )
 
     @abc.abstractmethod
     def programs(self) -> List[WGProgram]:
@@ -415,6 +457,14 @@ def simulate(
     the resolved ``devices_per_node`` is forwarded to the scenario (which
     builds its :class:`repro.core.topology.Topology` from it), e.g.
     ``simulate("hierarchical_allreduce", nodes=4, devices_per_node=4)``.
+
+    ``fabric=`` (a registered interconnect preset name such as
+    ``"fat_tree"`` or ``"rail_optimized"``, or a ready
+    :class:`repro.core.interconnect.InterconnectSpec`) and ``link_bw=``
+    (per-link-class bandwidth overrides, validated) are ordinary scenario
+    parameters on every closed-loop scenario — the same workload runs over
+    any fabric, e.g. ``simulate("all_to_all", devices=16, nodes=4,
+    closed_loop=True, fabric="rail_optimized")``.
 
     Scenarios built with ``closed_loop=True`` run in a
     :class:`repro.core.cluster.Cluster` (every device program-driven, flags

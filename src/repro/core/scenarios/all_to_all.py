@@ -57,6 +57,8 @@ class AllToAllScenario(Scenario):
         writes_per_peer: int = 8,
         closed_loop: bool = False,
         devices_per_node: Optional[int] = None,
+        fabric=None,
+        link_bw=None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -71,9 +73,13 @@ class AllToAllScenario(Scenario):
         self.hw = hw
         k = cfg.n_devices
         self.payload_bytes = self.tokens_per_device * self.token_bytes
-        # Closed-loop fabric shape (flat when devices_per_node is unset); the
-        # open-loop arrival schedule keeps the flat single-tier algebra.
-        self.topology = Topology.for_devices(k, devices_per_node, hw=hw)
+        # Closed-loop fabric shape (flat when devices_per_node is unset,
+        # fabric= selects any registered preset); the open-loop arrival
+        # schedule keeps the flat single-tier algebra.
+        self._setup_fabric(
+            devices_per_node=devices_per_node, hw=hw, fabric=fabric,
+            link_bw=link_bw,
+        )
         self.cost = Topology.flat_ring(k, axis="ep", hw=hw).collective(
             "all-to-all", self.payload_bytes, "ep"
         )
@@ -84,6 +90,7 @@ class AllToAllScenario(Scenario):
             "skew_ns": self.skew_ns,
             "closed_loop": self.closed_loop,
             "devices_per_node": self.devices_per_node,
+            "fabric": self.fabric_name,
         }
 
     # ------------------------------------------------------------------

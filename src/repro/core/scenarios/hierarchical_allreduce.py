@@ -37,7 +37,7 @@ from ..scenario import (
     register_scenario,
     xgmi_out,
 )
-from ..topology import HardwareSpec, Topology, V5E
+from ..topology import HardwareSpec, V5E
 
 __all__ = ["HierarchicalAllReduceScenario"]
 
@@ -69,6 +69,8 @@ class HierarchicalAllReduceScenario(Scenario):
         devices_per_node: Optional[int] = None,
         writes_per_step: int = 4,
         closed_loop: bool = True,
+        fabric=None,
+        link_bw=None,
         hw: HardwareSpec = V5E,
     ):
         if not closed_loop:
@@ -98,12 +100,20 @@ class HierarchicalAllReduceScenario(Scenario):
         self.writes_per_step = int(writes_per_step)
         self.closed_loop = True
         self.hw = hw
-        self.topology = Topology.for_devices(n, devices_per_node, hw=hw)
+        # The *program structure* (leaders, handoffs, stages) follows
+        # devices_per_node; the *fabric* carrying it is independently
+        # pluggable — the same hierarchical collective can run over two_tier
+        # uplinks, a fat tree, or rails.
+        self._setup_fabric(
+            devices_per_node=devices_per_node, hw=hw, fabric=fabric,
+            link_bw=link_bw,
+        )
         self.params = {
             "payload_bytes": self.payload_bytes,
             "devices_per_node": self.devices_per_node,
             "writes_per_step": self.writes_per_step,
             "closed_loop": True,
+            "fabric": self.fabric_name,
         }
 
     # ------------------------------------------------------------------

@@ -59,6 +59,8 @@ class PipelineP2PScenario(Scenario):
         interval_ns: Optional[float] = None,
         closed_loop: bool = False,
         devices_per_node: Optional[int] = None,
+        fabric=None,
+        link_bw=None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -77,10 +79,12 @@ class PipelineP2PScenario(Scenario):
         self.downstream = 2 if cfg.n_devices > 2 else 1
         # Closed-loop fabric shape: consecutive pipeline stages share a node
         # until a stage boundary crosses a node boundary, where the hand-off
-        # rides the DCI uplink (flat when devices_per_node is unset).  The
-        # open-loop cadence keeps the flat single-tier algebra.
-        self.topology = Topology.for_devices(
-            cfg.n_devices, devices_per_node, hw=hw
+        # rides the DCI uplink (flat when devices_per_node is unset, fabric=
+        # selects any registered preset).  The open-loop cadence keeps the
+        # flat single-tier algebra.
+        self._setup_fabric(
+            devices_per_node=devices_per_node, hw=hw, fabric=fabric,
+            link_bw=link_bw,
         )
         self.cost = Topology.flat_ring(
             cfg.n_devices, axis="pp", hw=hw
@@ -95,6 +99,7 @@ class PipelineP2PScenario(Scenario):
             "interval_ns": self.interval_ns,
             "closed_loop": self.closed_loop,
             "devices_per_node": self.devices_per_node,
+            "fabric": self.fabric_name,
         }
 
     @classmethod

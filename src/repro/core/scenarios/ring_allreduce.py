@@ -65,6 +65,8 @@ class RingAllReduceScenario(Scenario):
         writes_per_step: int = 4,
         closed_loop: bool = False,
         devices_per_node: Optional[int] = None,
+        fabric=None,
+        link_bw=None,
         hw: HardwareSpec = V5E,
     ):
         super().__init__(cfg, amap)
@@ -79,8 +81,12 @@ class RingAllReduceScenario(Scenario):
         self.steps = 2 * (k - 1)
         self.upstream = k - 1
         # Closed-loop fabric shape: the global ring maps onto intra-node ICI
-        # rings stitched by DCI uplinks (flat when devices_per_node is unset).
-        self.topology = Topology.for_devices(k, devices_per_node, hw=hw)
+        # rings stitched by DCI uplinks (flat when devices_per_node is unset);
+        # fabric= selects any registered interconnect preset instead.
+        self._setup_fabric(
+            devices_per_node=devices_per_node, hw=hw, fabric=fabric,
+            link_bw=link_bw,
+        )
         # Open-loop cadence keeps the flat single-ring collective algebra the
         # trace schedule was always derived from.
         self.cost = Topology.flat_ring(k, axis="ring", hw=hw).collective(
@@ -96,6 +102,7 @@ class RingAllReduceScenario(Scenario):
             "writes_per_step": self.writes_per_step,
             "closed_loop": self.closed_loop,
             "devices_per_node": self.devices_per_node,
+            "fabric": self.fabric_name,
         }
 
     @classmethod

@@ -1,4 +1,4 @@
-"""Interconnect topology, collective-cost model, and the tiered fabric.
+"""Interconnect topology, collective-cost model, and the pluggable fabric.
 
 Maps the paper's xGMI fabric onto the TPU v5e target: a 2D ICI torus within a
 pod (16x16 for the production mesh) and a lower-bandwidth inter-pod fabric for
@@ -8,45 +8,45 @@ arrival schedules for Eidola pod-scale replay (each ring step's completion is
 one semaphore write — the TPU analogue of the paper's flag writes).
 
 :class:`FabricModel` is the closed-loop counterpart: per-message routing over
-a *tiered* fabric (intra-node ICI rings stitched by per-node DCI uplinks,
-each egress port with its own serialization/contention state), which the
-:class:`repro.core.cluster.Cluster` uses to derive physical arrival times for
-emitted flag writes.  ``Topology.flat_ring`` / ``two_tier`` /
-``for_devices`` make tier participation explicit, and
-``FabricModel.from_topology`` derives the closed-loop shape from them.
+a graph-based fabric described by an
+:class:`repro.core.interconnect.InterconnectSpec` — typed link classes,
+first-class egress ports with their own serialization/contention state, and a
+:class:`repro.core.interconnect.RoutingPolicy` whose per-pair legs are
+memoized into a route table.  The :class:`repro.core.cluster.Cluster` uses it
+to derive physical arrival times for emitted flag writes.
+``Topology.flat_ring`` / ``two_tier`` / ``for_devices`` make tier
+participation explicit, and ``FabricModel.from_topology`` derives the
+closed-loop shape from them (``ring`` / ``two_tier`` presets, bit-identical
+to the original hard-coded router); ``fabric="fat_tree"`` /
+``"rail_optimized"`` / ``"torus2d"`` select the richer presets.
 
 Hardware constants follow the assignment: 197 TFLOP/s bf16 per chip,
-819 GB/s HBM, ~50 GB/s/link ICI.
+819 GB/s HBM, ~50 GB/s/link ICI (:class:`HardwareSpec` lives in
+:mod:`repro.core.interconnect` and is re-exported here).
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Literal, Optional, Sequence, Tuple
+
+from .interconnect import (
+    V5E,
+    FabricLike,
+    HardwareSpec,
+    InterconnectSpec,
+    Leg,
+    _ring_route,
+    build_fabric,
+    resolve_fabric,
+)
 
 __all__ = ["HardwareSpec", "Topology", "CollectiveCost", "FabricModel", "V5E"]
 
 CollectiveKind = Literal[
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"
 ]
-
-
-@dataclass(frozen=True)
-class HardwareSpec:
-    name: str = "tpu-v5e"
-    peak_flops_bf16: float = 197e12     # per chip
-    hbm_bw: float = 819e9               # bytes/s per chip
-    ici_link_bw: float = 50e9           # bytes/s per link per direction
-    ici_links_per_axis: int = 1         # links a ring along one axis can use
-    ici_hop_latency_s: float = 1e-6
-    dci_link_bw: float = 12.5e9         # inter-pod (pod axis) bandwidth
-    dci_hop_latency_s: float = 10e-6
-    vmem_bytes: int = 128 * 1024 * 1024
-    hbm_bytes: int = 16 * 1024**3
-
-
-V5E = HardwareSpec()
 
 
 @dataclass(frozen=True)
@@ -231,7 +231,7 @@ class Topology:
 
 
 class FabricModel:
-    """Per-message routing over a *tiered* fabric, with per-port contention.
+    """Per-message routing over a pluggable fabric, with per-port contention.
 
     This is the closed-loop counterpart of :meth:`Topology.collective`: instead
     of pricing a whole collective in closed form, it prices *one xGMI write
@@ -239,31 +239,26 @@ class FabricModel:
     :class:`repro.core.cluster.Cluster` can register the write into the
     destination device's WTT at a physically-derived arrival time.
 
-    Devices are grouped into nodes of ``devices_per_node`` consecutive ids
-    (``rank -> (node, local) = divmod(rank, devices_per_node)``); two tiers
-    carry traffic:
+    The fabric's *shape* is an :class:`repro.core.interconnect.InterconnectSpec`:
+    typed link classes, declared egress ports, and a routing policy whose
+    per-pair legs are memoized into a route table (computed once per pair,
+    never per message).  Pricing one message walks its legs — per leg:
 
-    * **ICI (intra-node)** — the local ranks of one node form a bidirectional
-      ring; one egress port per ``(device, direction)``.
-    * **DCI (inter-node)** — the nodes form a bidirectional ring of gateway
-      devices (local rank 0); each node owns one DCI uplink port per
-      direction, with its *own* serialization/contention state.
+    * store-and-forward serialization of the burst on the leg's egress port
+      (``bytes / class_bw``), FIFO behind the port's previous burst
+      (contention: back-to-back emissions queue up per port);
+    * shortest-path hop count x the link class's hop latency.
 
-    A same-node message is exactly the classic flat-ring model on the local
-    ring.  A cross-node message composes up to three store-and-forward legs —
-    ``intra (src -> gateway) -> DCI (gateway -> gateway) -> intra (gateway ->
-    dst)`` — re-serializing and FIFO-queueing at each leg's egress port.  Per
-    leg the cost is the paper-simple recipe the flat model used:
+    ``stats`` counts messages/bytes/queueing in total and per link class
+    (``ici_*`` / ``dci_*`` / ``spine_*`` / ``rail_*`` / ...), and
+    ``port_stats`` holds the same triple per egress port (the per-port sums
+    equal the per-class sums — a tested invariant).
 
-    * shortest-path hop count on the leg's ring x the tier's hop latency;
-    * store-and-forward serialization of the burst on the egress port
-      (``bytes / tier_link_bw``);
-    * contention: each egress port is busy until its previous burst finished
-      serializing, so back-to-back emissions queue up (FIFO per port).
-
-    With one node (``devices_per_node >= n_devices``, the default when built
-    from a device count) every message takes the single same-node leg and the
-    model is bit-for-bit the old flat ring.
+    The legacy constructor knobs build the ``ring`` / ``two_tier`` presets,
+    bit-identical to the original hard-coded router: with one node
+    (``devices_per_node >= n_devices``, the default when built from a device
+    count) every message takes a single same-ring leg and the model is
+    bit-for-bit the old flat ring.
 
     All state updates are deterministic in emission order, which both engines
     reproduce identically (writes before transitions, devices in id order), so
@@ -272,7 +267,7 @@ class FabricModel:
 
     def __init__(
         self,
-        n_devices: int,
+        n_devices: Optional[int] = None,
         hw: HardwareSpec = V5E,
         *,
         devices_per_node: Optional[int] = None,
@@ -280,94 +275,142 @@ class FabricModel:
         link_bw_bytes_per_ns: Optional[float] = None,
         dci_hop_latency_ns: Optional[float] = None,
         dci_link_bw_bytes_per_ns: Optional[float] = None,
+        spec: Optional[InterconnectSpec] = None,
     ):
-        if n_devices < 2:
-            raise ValueError("a fabric needs at least 2 devices")
-        self.n_devices = int(n_devices)
+        if isinstance(n_devices, InterconnectSpec):
+            if spec is not None:
+                raise ValueError("pass the spec once, not twice")
+            spec, n_devices = n_devices, None
+        if spec is None:
+            if n_devices is None:
+                raise ValueError("FabricModel needs n_devices or a spec")
+            if n_devices < 2:
+                raise ValueError("a fabric needs at least 2 devices")
+            n_devices = int(n_devices)
+            if devices_per_node is None or devices_per_node >= n_devices:
+                devices_per_node = n_devices
+            if devices_per_node < 1 or n_devices % devices_per_node:
+                raise ValueError(
+                    f"devices_per_node={devices_per_node} must divide "
+                    f"n_devices={n_devices}"
+                )
+            link_bw: Dict[str, float] = {}
+            link_lat: Dict[str, float] = {}
+            if link_bw_bytes_per_ns is not None:
+                link_bw["ici"] = float(link_bw_bytes_per_ns)
+            if hop_latency_ns is not None:
+                link_lat["ici"] = float(hop_latency_ns)
+            if dci_link_bw_bytes_per_ns is not None:
+                link_bw["dci"] = float(dci_link_bw_bytes_per_ns)
+            if dci_hop_latency_ns is not None:
+                link_lat["dci"] = float(dci_hop_latency_ns)
+            spec = build_fabric(
+                "two_tier" if devices_per_node < n_devices else "ring",
+                n_devices,
+                hw,
+                devices_per_node=devices_per_node,
+                link_bw=link_bw,
+                link_latency_ns=link_lat,
+            )
+        elif n_devices is not None and int(n_devices) != spec.n_devices:
+            raise ValueError(
+                f"n_devices={n_devices} contradicts spec.n_devices="
+                f"{spec.n_devices}"
+            )
+        self.spec = spec
         self.hw = hw
-        if devices_per_node is None or devices_per_node >= self.n_devices:
-            devices_per_node = self.n_devices
-        if devices_per_node < 1 or self.n_devices % devices_per_node:
-            raise ValueError(
-                f"devices_per_node={devices_per_node} must divide "
-                f"n_devices={n_devices}"
-            )
-        self.devices_per_node = int(devices_per_node)
-        self.n_nodes = self.n_devices // self.devices_per_node
-        self.hop_latency_ns = (
-            float(hop_latency_ns)
-            if hop_latency_ns is not None
-            else hw.ici_hop_latency_s * 1e9
-        )
-        self.link_bw_bytes_per_ns = (
-            float(link_bw_bytes_per_ns)
-            if link_bw_bytes_per_ns is not None
-            else hw.ici_link_bw * self.hw.ici_links_per_axis / 1e9
-        )
-        self.dci_hop_latency_ns = (
-            float(dci_hop_latency_ns)
-            if dci_hop_latency_ns is not None
-            else hw.dci_hop_latency_s * 1e9
-        )
-        self.dci_link_bw_bytes_per_ns = (
-            float(dci_link_bw_bytes_per_ns)
-            if dci_link_bw_bytes_per_ns is not None
-            else hw.dci_link_bw / 1e9
-        )
-        if self.hop_latency_ns < 0 or self.link_bw_bytes_per_ns <= 0:
-            raise ValueError("hop latency must be >= 0 and link bandwidth > 0")
-        if self.dci_hop_latency_ns < 0 or self.dci_link_bw_bytes_per_ns <= 0:
-            raise ValueError(
-                "DCI hop latency must be >= 0 and DCI bandwidth > 0"
-            )
-        # ICI ports are (device, direction); DCI uplinks are ("dci", node,
-        # direction) -> ns at which the egress port frees up
+        self.n_devices = spec.n_devices
+        self.devices_per_node = spec.devices_per_node
+        self.n_nodes = spec.n_nodes
+        # (bw_bytes_per_ns, hop_latency_ns) per link class, resolved once
+        self._cls: Dict[str, Tuple[float, float]] = {
+            name: (lc.bw_bytes_per_ns, lc.hop_latency_ns)
+            for name, lc in spec.link_classes.items()
+        }
+        # memoized per-pair leg table (the RoutingPolicy runs once per pair)
+        self._leg_table: Dict[Tuple[int, int], Tuple[Leg, ...]] = {}
+        # egress port -> ns at which the port frees up
         self._busy_until_ns: Dict[Tuple, float] = {}
         self.stats = self._fresh_stats()
+        # egress port -> [messages, bytes, queued_ns]
+        self.port_stats: Dict[Tuple, List[float]] = {}
 
     @classmethod
-    def from_topology(cls, topo: Topology, **overrides) -> "FabricModel":
+    def from_spec(cls, spec: InterconnectSpec) -> "FabricModel":
+        """The fabric an :class:`InterconnectSpec` describes, verbatim."""
+        return cls(spec=spec)
+
+    @classmethod
+    def from_topology(
+        cls,
+        topo: Topology,
+        *,
+        fabric: FabricLike = None,
+        link_bw: Optional[Dict[str, float]] = None,
+        link_latency_ns: Optional[Dict[str, float]] = None,
+        **overrides,
+    ) -> "FabricModel":
         """The closed-loop fabric a :class:`Topology` describes: its non-DCI
         axes collapse into the intra-node tier, its DCI axes into the
-        inter-node tier, with bandwidths/latencies from ``topo.hw`` (keyword
-        overrides win, as in ``__init__``)."""
-        return cls(
+        inter-node tier (the ``ring``/``two_tier`` presets), with
+        bandwidths/latencies from ``topo.hw``.
+
+        ``fabric`` selects a different registered preset (or passes a
+        ready-built spec); ``link_bw``/``link_latency_ns`` override per link
+        *class* (bytes/ns == GB/s, and ns) — unknown class names raise an
+        error listing the fabric's valid classes.  The legacy scalar keywords
+        (``hop_latency_ns`` etc.) keep working as ici/dci aliases; anything
+        else is rejected rather than silently ignored."""
+        link_bw = dict(link_bw or {})
+        link_latency_ns = dict(link_latency_ns or {})
+        legacy = {
+            "link_bw_bytes_per_ns": (link_bw, "ici"),
+            "dci_link_bw_bytes_per_ns": (link_bw, "dci"),
+            "hop_latency_ns": (link_latency_ns, "ici"),
+            "dci_hop_latency_ns": (link_latency_ns, "dci"),
+        }
+        for key, val in overrides.items():
+            if key not in legacy:
+                raise ValueError(
+                    f"unknown FabricModel override {key!r}; pass per-class "
+                    "overrides via link_bw=/link_latency_ns= (valid keys: "
+                    f"{sorted(legacy)})"
+                )
+            if val is not None:
+                target, cls_name = legacy[key]
+                target.setdefault(cls_name, float(val))
+        spec = resolve_fabric(
+            fabric,
             topo.n_chips,
             topo.hw,
             devices_per_node=topo.devices_per_node,
-            **overrides,
+            link_bw=link_bw,
+            link_latency_ns=link_latency_ns,
+        )
+        if spec is not None:
+            return cls(spec=spec)
+        return cls(
+            topo.n_chips, topo.hw, devices_per_node=topo.devices_per_node
         )
 
-    @staticmethod
-    def _fresh_stats() -> Dict[str, float]:
-        return {
-            "messages": 0,
-            "bytes": 0,
-            "queued_ns": 0.0,
-            # per-tier leg counters (a cross-node message counts one leg per
-            # tier it traverses; totals above count each message once)
-            "ici_messages": 0,
-            "ici_bytes": 0,
-            "ici_queued_ns": 0.0,
-            "dci_messages": 0,
-            "dci_bytes": 0,
-            "dci_queued_ns": 0.0,
-        }
+    def _fresh_stats(self) -> Dict[str, float]:
+        st: Dict[str, float] = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
+        # per-class leg counters (a multi-leg message counts one leg per
+        # class it traverses; totals above count each message once)
+        for name in self.spec.link_classes:
+            st[name + "_messages"] = 0
+            st[name + "_bytes"] = 0
+            st[name + "_queued_ns"] = 0.0
+        return st
 
     def reset(self) -> None:
         self._busy_until_ns.clear()
         self.stats = self._fresh_stats()
+        self.port_stats = {}
 
     # ------------------------------------------------------------------
     # routing
     # ------------------------------------------------------------------
-
-    @staticmethod
-    def _ring_route(src: int, dst: int, n: int) -> Tuple[int, int]:
-        """(hops, direction) of the shortest path on an ``n``-ring."""
-        fwd = (dst - src) % n
-        bwd = (src - dst) % n
-        return (fwd, +1) if fwd <= bwd else (bwd, -1)
 
     def _check(self, src: int, dst: int) -> None:
         n = self.n_devices
@@ -377,12 +420,32 @@ class FabricModel:
     def node_of(self, device: int) -> int:
         return device // self.devices_per_node
 
+    def legs(self, src: int, dst: int) -> Tuple[Leg, ...]:
+        """The routed path of one device pair, from the memoized per-pair
+        table (the :class:`RoutingPolicy` runs once per pair)."""
+        self._check(src, dst)
+        key = (src, dst)
+        legs = self._leg_table.get(key)
+        if legs is None:
+            legs = tuple(self.spec.routing.legs(self.spec, src, dst))
+            self._leg_table[key] = legs
+        return legs
+
+    def route_table(self) -> Dict[Tuple[int, int], Tuple[Leg, ...]]:
+        """Materialize (and return) the full per-pair leg table."""
+        n = self.n_devices
+        for src in range(n):
+            for dst in range(n):
+                if src != dst:
+                    self.legs(src, dst)
+        return dict(self._leg_table)
+
     def route(self, src: int, dst: int) -> Tuple[int, int]:
         """(hops, direction) of the shortest same-ring path; +1 = ascending.
 
         Valid for same-node pairs (the intra ring; with one node that is every
         pair, matching the old flat model).  Cross-node pairs take a composed
-        tiered path — see :meth:`route_legs`.
+        multi-leg path — see :meth:`route_legs`.
         """
         self._check(src, dst)
         dpn = self.devices_per_node
@@ -390,36 +453,22 @@ class FabricModel:
         dn, dl = divmod(dst, dpn)
         if sn != dn:
             raise ValueError(
-                f"route {src} -> {dst} crosses nodes {sn} -> {dn}; tiered "
+                f"route {src} -> {dst} crosses nodes {sn} -> {dn}; composed "
                 "paths are described by route_legs()"
             )
-        return self._ring_route(sl, dl, dpn)
+        return _ring_route(sl, dl, dpn)
 
     def route_legs(self, src: int, dst: int) -> List[Tuple[str, Tuple, int]]:
-        """The composed path as ``(tier, egress_port, hops)`` legs.
+        """The composed path as ``(link_class, egress_port, hops)`` legs.
 
-        Same-node: one ``("ici", (src, dir), hops)`` leg.  Cross-node: an
-        optional intra leg to the source gateway, a ``("dci", ("dci", node,
-        dir), hops)`` uplink leg between gateways, and an optional intra leg
-        from the destination gateway (zero-hop legs are omitted).
+        The legacy view of :meth:`legs` — e.g. on the ``two_tier`` preset a
+        same-node pair is one ``("ici", (src, dir), hops)`` leg and a
+        cross-node pair composes an optional intra leg to the source gateway,
+        a ``("dci", ("dci", node, dir), hops)`` uplink leg between gateways,
+        and an optional intra leg from the destination gateway (zero-hop legs
+        are omitted).
         """
-        self._check(src, dst)
-        dpn = self.devices_per_node
-        sn, sl = divmod(src, dpn)
-        dn, dl = divmod(dst, dpn)
-        if sn == dn:
-            hops, d = self._ring_route(sl, dl, dpn)
-            return [("ici", (src, d), hops)]
-        legs: List[Tuple[str, Tuple, int]] = []
-        if sl != 0:
-            hops, d = self._ring_route(sl, 0, dpn)
-            legs.append(("ici", (src, d), hops))
-        nhops, nd = self._ring_route(sn, dn, self.n_nodes)
-        legs.append(("dci", ("dci", sn, nd), nhops))
-        if dl != 0:
-            hops, d = self._ring_route(0, dl, dpn)
-            legs.append(("ici", (dn * dpn, d), hops))
-        return legs
+        return [(leg.cls, leg.port, leg.hops) for leg in self.legs(src, dst)]
 
     # ------------------------------------------------------------------
     # transfers
@@ -445,6 +494,12 @@ class FabricModel:
         self.stats[tier + "_messages"] += 1
         self.stats[tier + "_bytes"] += nbytes
         self.stats[tier + "_queued_ns"] += queued
+        ps = self.port_stats.get(port)
+        if ps is None:
+            ps = self.port_stats[port] = [0, 0, 0.0]
+        ps[0] += 1
+        ps[1] += nbytes
+        ps[2] += queued
         return start + ser_ns + hops * lat
 
     def transfer(self, src: int, dst: int, nbytes: int, issue_ns: float) -> float:
@@ -454,35 +509,15 @@ class FabricModel:
         returns when the burst becomes *deliverable* at the destination
         directory.
         """
-        self._check(src, dst)
         nb = max(0, nbytes)
+        legs = self.legs(src, dst)
         self.stats["messages"] += 1
         self.stats["bytes"] += nb
-        dpn = self.devices_per_node
-        sn, sl = divmod(src, dpn)
-        dn, dl = divmod(dst, dpn)
-        ici_bw = self.link_bw_bytes_per_ns
-        ici_lat = self.hop_latency_ns
-        if sn == dn:
-            hops, d = self._ring_route(sl, dl, dpn)
-            return self._leg("ici", (src, d), nb, issue_ns, hops, ici_bw, ici_lat)
         t = issue_ns
-        if sl != 0:
-            hops, d = self._ring_route(sl, 0, dpn)
-            t = self._leg("ici", (src, d), nb, t, hops, ici_bw, ici_lat)
-        nhops, nd = self._ring_route(sn, dn, self.n_nodes)
-        t = self._leg(
-            "dci",
-            ("dci", sn, nd),
-            nb,
-            t,
-            nhops,
-            self.dci_link_bw_bytes_per_ns,
-            self.dci_hop_latency_ns,
-        )
-        if dl != 0:
-            hops, d = self._ring_route(0, dl, dpn)
-            t = self._leg("ici", (dn * dpn, d), nb, t, hops, ici_bw, ici_lat)
+        cls = self._cls
+        for leg in legs:
+            bw, lat = cls[leg.cls]
+            t = self._leg(leg.cls, leg.port, nb, t, leg.hops, bw, lat)
         return t
 
     def transfer_batch(
@@ -504,41 +539,40 @@ class FabricModel:
         egress port serialize back-to-back, so each port's queue is a prefix
         sum over its bursts' serialization times — computed here with one
         cumulative sum per port instead of a python transition per message.
-        Cross-node batches fall back to the per-message path (their legs
-        couple ports in issue order).
+        Batches with any multi-leg route fall back to the per-message path
+        (their legs couple ports in issue order).
         """
         if len(dsts) != len(nbytes):
             raise ValueError("dsts and nbytes length mismatch")
-        if (
-            len(dsts) < 16  # numpy setup costs more than it saves
-            or (
-                self.n_nodes > 1
-                and any(self.node_of(d) != self.node_of(src) for d in dsts)
-            )
-        ):
+        single = len(dsts) >= 16  # below that, numpy setup costs more
+        if single:
+            for d in dsts:
+                if len(self.legs(src, d)) != 1:
+                    single = False
+                    break
+        if not single:
             return [
                 self.transfer(src, d, nb, issue_ns)
                 for d, nb in zip(dsts, nbytes)
             ]
         import numpy as np
 
-        dpn = self.devices_per_node
-        sl = src % dpn
-        bw = self.link_bw_bytes_per_ns
-        lat = self.hop_latency_ns
         arrivals = [0.0] * len(dsts)
         queued = [0.0] * len(dsts)
-        # group by egress port (only two directions exist for one source),
-        # preserving per-port emission order
-        by_port: Dict[Tuple, Tuple[List[int], List[int], List[int]]] = {}
+        # group by egress port, preserving per-port emission order
+        by_port: Dict[Tuple, Tuple[str, List[int], List[int], List[int]]] = {}
         for i, (dst, nb) in enumerate(zip(dsts, nbytes)):
-            self._check(src, dst)
-            hops, d = self._ring_route(sl, dst % dpn, dpn)
-            idxs, hlist, blist = by_port.setdefault((src, d), ([], [], []))
+            (leg,) = self.legs(src, dst)
+            entry = by_port.get(leg.port)
+            if entry is None:
+                entry = by_port[leg.port] = (leg.cls, [], [], [])
+            _, idxs, hlist, blist = entry
             idxs.append(i)
-            hlist.append(hops)
+            hlist.append(leg.hops)
             blist.append(max(0, nb))
-        for port, (idxs, hlist, blist) in by_port.items():
+        leg_cls = [None] * len(dsts)
+        for port, (cname, idxs, hlist, blist) in by_port.items():
+            bw, lat = self._cls[cname]
             b0 = self._busy_until_ns.get(port, 0.0)
             start0 = max(issue_ns, b0)
             # busy_k after burst k: start0 + ser_1 + ... + ser_k, accumulated
@@ -548,19 +582,28 @@ class FabricModel:
             np.divide(blist, bw, out=chain[1:])
             busy = np.cumsum(chain)
             self._busy_until_ns[port] = float(busy[-1])
+            ps = self.port_stats.get(port)
+            if ps is None:
+                ps = self.port_stats[port] = [0, 0, 0.0]
             # start of burst k is busy_{k-1}; arrival adds the hop latency
             for j, i in enumerate(idxs):
                 arrivals[i] = float(busy[j + 1]) + hlist[j] * lat
-                queued[i] = float(busy[j]) - issue_ns
+                q = float(busy[j]) - issue_ns
+                queued[i] = q
+                leg_cls[i] = cname
+                ps[0] += 1
+                ps[1] += max(0, nbytes[i])
+                ps[2] += q
         # totals accumulate in emission order, matching the sequential path's
         # float-add sequence exactly
         st = self.stats
         for i, nb in enumerate(nbytes):
             nb = max(0, nb)
+            cname = leg_cls[i]
             st["messages"] += 1
             st["bytes"] += nb
             st["queued_ns"] += queued[i]
-            st["ici_messages"] += 1
-            st["ici_bytes"] += nb
-            st["ici_queued_ns"] += queued[i]
+            st[cname + "_messages"] += 1
+            st[cname + "_bytes"] += nb
+            st[cname + "_queued_ns"] += queued[i]
         return arrivals

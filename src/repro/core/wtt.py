@@ -19,7 +19,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .events import RegisteredWrite, TraceBundle
 
@@ -75,6 +75,40 @@ class WriteTrackingTable:
         self.stats.max_pending = max(self.stats.max_pending, len(self._heap))
         if self.on_register is not None:
             self.on_register(cyc)
+
+    def register_many(self, writes: Sequence[RegisteredWrite]) -> None:
+        """Register a batch of writes with one heap restructure.
+
+        Bit-identical to calling :meth:`register` once per write in order —
+        heap pops are fully determined by the sorted ``(cycle, reg_no)`` keys,
+        and batch reg_nos are assigned in the same order the sequential calls
+        would have used — but the heap invariant is restored once per batch
+        (``heapify``, O(n)) instead of once per write (``heappush``,
+        O(log n) each), and the engine's ``on_register`` calendar hook fires
+        once with the batch's earliest wakeup cycle instead of per write
+        (sufficient: after every calendar pop the engine re-reads the table's
+        actual head).  This is the closed-loop incast lever: an ``all_to_all``
+        dispatch completion lands O(devices) marker+flag bursts per peer —
+        O(devices^2) registrations per run — previously each paying its own
+        push and hook call.
+        """
+        heap = self._heap
+        n2c = self.ns_to_cycles
+        nxt = self._reg_no
+        entries = [(n2c(w.wakeup_ns), next(nxt), w) for w in writes]
+        if not entries:
+            return
+        # a few pushes into a big heap beat re-heapifying the whole heap
+        if len(entries) * 8 < len(heap):
+            for e in entries:
+                heapq.heappush(heap, e)
+        else:
+            heap.extend(entries)
+            heapq.heapify(heap)
+        self.stats.registered += len(entries)
+        self.stats.max_pending = max(self.stats.max_pending, len(heap))
+        if self.on_register is not None:
+            self.on_register(min(c for c, _, _ in entries))
 
     def register_bundle(self, bundle: TraceBundle) -> None:
         for w in bundle:

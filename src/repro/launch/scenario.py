@@ -13,6 +13,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.scenario \
       --scenario hierarchical_allreduce --devices 16 --nodes 4 \
       --dci-bw 6.25 --detailed all
+  PYTHONPATH=src python -m repro.launch.scenario --scenario all_to_all \
+      --devices 16 --nodes 4 --detailed all --fabric rail_optimized
+  PYTHONPATH=src python -m repro.launch.scenario --scenario ring_allreduce \
+      --devices 8 --nodes 4 --detailed all --fabric fat_tree \
+      --link spine=3.125
 
 ``-p/--param key=value`` sets a scenario constructor parameter or a SimConfig
 field for a single run; ``--sweep key=v1,v2,...`` builds a grid handled by
@@ -28,7 +33,13 @@ single-detailed-device replay.
 
 ``--nodes K`` splits the devices into K nodes (``devices_per_node = N / K``):
 intra-node hops ride the ICI tier, inter-node hops the per-node DCI uplinks.
-``--ici-bw`` / ``--dci-bw`` override the per-tier link bandwidths in GB/s.
+``--fabric NAME`` selects a registered interconnect preset (``ring``,
+``two_tier``, ``fat_tree``, ``rail_optimized``, ``torus2d`` — see
+``--list-fabrics``) for the closed-loop fabric; ``--link CLASS=GBPS``
+overrides one link class's bandwidth (repeatable; unknown classes raise an
+error listing the fabric's valid ones).  ``--ici-bw`` / ``--dci-bw`` remain
+as aliases for ``--link ici=…`` / ``--link dci=…`` (and additionally scale
+the open-loop arrival schedules derived from the hardware model).
 """
 
 from __future__ import annotations
@@ -43,7 +54,9 @@ from repro.core import (
     SimConfig,
     SweepRunner,
     SyncPolicy,
+    get_fabric,
     get_scenario,
+    list_fabrics,
     list_scenarios,
     simulate,
 )
@@ -98,6 +111,8 @@ def main(argv=None) -> int:
                     help="registered scenario name (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
+    ap.add_argument("--list-fabrics", action="store_true",
+                    help="list registered interconnect presets and exit")
     ap.add_argument("--engine", default="event",
                     choices=[e.value for e in EngineKind])
     ap.add_argument("--engines", default=None,
@@ -110,10 +125,22 @@ def main(argv=None) -> int:
                     help="group the devices into K nodes (devices_per_node = "
                          "N / K); intra-node traffic rides ICI, inter-node "
                          "traffic the per-node DCI uplinks")
+    ap.add_argument("--fabric", default=None, metavar="NAME",
+                    help="interconnect preset for the closed-loop fabric "
+                         "(see --list-fabrics)")
+    ap.add_argument("--link", action="append", default=[],
+                    metavar="CLASS=GBPS",
+                    help="override one link class's bandwidth in GB/s "
+                         "(repeatable, e.g. --link spine=3.125); unknown "
+                         "classes raise an error listing valid ones")
     ap.add_argument("--ici-bw", type=float, default=None, metavar="GBPS",
-                    help="intra-node (ICI) link bandwidth override, GB/s")
+                    help="intra-node (ICI) link bandwidth override, GB/s "
+                         "(alias for --link ici=GBPS; also scales open-loop "
+                         "arrival schedules)")
     ap.add_argument("--dci-bw", type=float, default=None, metavar="GBPS",
-                    help="inter-node (DCI) link bandwidth override, GB/s")
+                    help="inter-node (DCI) link bandwidth override, GB/s "
+                         "(alias for --link dci=GBPS; also scales open-loop "
+                         "arrival schedules)")
     ap.add_argument("--detailed", default="0", choices=["0", "all"],
                     help="'all': closed-loop cluster, every device detailed; "
                          "'0': open-loop replay with one detailed device")
@@ -134,10 +161,24 @@ def main(argv=None) -> int:
             print(f"{name:18s} {doc}")
         return 0
 
+    if args.list_fabrics:
+        for name in list_fabrics():
+            builder = get_fabric(name)
+            doc = " ".join(
+                (builder.__doc__ or builder.__module__).strip().split()
+            )
+            print(f"{name:16s} {doc}")
+        return 0
+
     try:
         get_scenario(args.scenario)
     except KeyError as e:
         raise SystemExit(f"error: {e.args[0]}")
+    if args.fabric is not None:
+        try:
+            get_fabric(args.fabric)
+        except KeyError as e:
+            raise SystemExit(f"error: {e.args[0]}")
 
     engines = [
         EngineKind(e)
@@ -154,7 +195,31 @@ def main(argv=None) -> int:
                 f"error: --nodes {args.nodes} needs --devices divisible by it"
             )
         sc_params.setdefault("devices_per_node", args.devices // args.nodes)
+    if args.fabric is not None:
+        sc_params.setdefault("fabric", args.fabric)
+    # per-link-class bandwidth overrides (GB/s == bytes/ns); these flow
+    # through InterconnectSpec.with_link_overrides, which *validates* the
+    # class names against the fabric instead of silently ignoring them
+    link_bw: Dict[str, float] = {}
+    for pair in args.link:
+        key, sep, val = pair.partition("=")
+        if not sep:
+            raise SystemExit(f"error: expected --link CLASS=GBPS, got {pair!r}")
+        try:
+            link_bw[key] = float(val)
+        except ValueError:
+            raise SystemExit(
+                f"error: --link {key} needs a numeric GB/s value, got {val!r}"
+            )
+    if args.ici_bw is not None:
+        link_bw.setdefault("ici", args.ici_bw)
+    if args.dci_bw is not None:
+        link_bw.setdefault("dci", args.dci_bw)
+    if link_bw:
+        sc_params.setdefault("link_bw", link_bw)
     if args.ici_bw is not None or args.dci_bw is not None:
+        # the legacy aliases also scale the hardware model, so open-loop
+        # arrival schedules (derived from hw, not the fabric) shift too
         from dataclasses import replace as _replace
 
         from repro.core.topology import V5E
@@ -180,6 +245,8 @@ def main(argv=None) -> int:
             grid.update({k: [v] for k, v in sc_params.items()})
         try:
             points = runner.run(grid)
+        except KeyError as e:  # unknown fabric/scenario via -p or --sweep
+            raise SystemExit(f"error: {e.args[0]}")
         except (NotImplementedError, TypeError, ValueError) as e:
             raise SystemExit(f"error: {e}")
         csv = SweepRunner.to_csv(points)
@@ -195,6 +262,8 @@ def main(argv=None) -> int:
         try:
             report = simulate(args.scenario, cfg, collect_segments=False,
                               **sc_params)
+        except KeyError as e:  # unknown fabric preset via -p fabric=...
+            raise SystemExit(f"error: {e.args[0]}")
         except (NotImplementedError, TypeError, ValueError) as e:
             raise SystemExit(f"error: {e}")
         print(report.summary())

@@ -67,6 +67,40 @@ def test_scenario_cli_lists_and_runs():
     assert len(counts) == 1
 
 
+def test_scenario_cli_listing_flags():
+    """Both registry listings: --list (scenarios) and --list-fabrics
+    (interconnect presets)."""
+    out = _run(["repro.launch.scenario", "--list"])
+    for name in ("gemv_allreduce", "ring_allreduce", "all_to_all",
+                 "pipeline_p2p", "hierarchical_allreduce"):
+        assert name in out
+    out = _run(["repro.launch.scenario", "--list-fabrics"])
+    for name in ("ring", "two_tier", "fat_tree", "rail_optimized", "torus2d"):
+        assert name in out
+    assert "oversubscribed" in out  # the gallery one-liners are printed
+
+
+def test_scenario_cli_fabric_preset_and_link_override():
+    out = _run([
+        "repro.launch.scenario", "--scenario", "all_to_all",
+        "--devices", "8", "--nodes", "4", "--detailed", "all",
+        "--fabric", "rail_optimized", "--link", "rail=25",
+        "-p", "workgroups=8",
+    ])
+    assert "8dev closed" in out
+    # unknown link classes are rejected with the valid list, not ignored
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.launch.scenario", "--scenario",
+         "all_to_all", "--devices", "8", "--nodes", "4", "--detailed", "all",
+         "--fabric", "rail_optimized", "--dci-bw", "6.25"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560,
+    )
+    assert bad.returncode != 0
+    assert "dci" in bad.stderr and "rail" in bad.stderr
+
+
 def test_scenario_cli_closed_loop_devices():
     out = _run([
         "repro.launch.scenario", "--scenario", "ring_allreduce",

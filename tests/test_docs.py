@@ -1,6 +1,7 @@
 """ARCHITECTURE.md stays executable: the custom-scenario (halo exchange)
-example is extracted from the document and run verbatim, so the public
-Scenario/EmitOp/Topology surface it teaches cannot drift from the code."""
+and fabric-gallery (rail_optimized) examples are extracted from the document
+and run verbatim, so the public Scenario/EmitOp/Topology/interconnect
+surface it teaches cannot drift from the code."""
 
 import os
 import re
@@ -30,3 +31,16 @@ def test_architecture_md_halo_example_executes(clean_registry):
     # the example's asserts (2-node DCI message count, flat-vs-tiered span)
     # run as written; a failure here means the doc lies about the code
     exec(compile(halo[0], "ARCHITECTURE.md:halo_exchange", "exec"), {})
+
+
+def test_architecture_md_fabric_gallery_example_executes():
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    rail = [
+        b for b in blocks
+        if "rail_optimized" in b and "halo_exchange" not in b
+    ]
+    assert len(rail) == 1, "expected exactly one rail-optimized code block"
+    # the gallery's asserts (rail faster than the shared uplink on the
+    # incast, per-class stats, rails knob) run as written
+    exec(compile(rail[0], "ARCHITECTURE.md:rail_optimized", "exec"), {})

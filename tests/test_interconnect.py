@@ -1,0 +1,457 @@
+"""Pluggable interconnect API tests.
+
+Covers the preset registry, routing invariants as property tests over random
+:class:`InterconnectSpec`s (every leg chain is connected src -> dst, legs only
+traverse declared ports/links, per-port stats sum to the per-class and global
+stats), link-override validation (unknown class -> actionable error), legacy
+bit-identity (``ring``/``two_tier`` presets == the topology-derived fabric),
+cycle/event bit-identity on a non-ring preset, and
+:meth:`WriteTrackingTable.register_many` equivalence with per-write
+registration.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    Cluster,
+    EngineKind,
+    FabricModel,
+    RegisteredWrite,
+    SimConfig,
+    Topology,
+    WriteTrackingTable,
+    build_fabric,
+    get_fabric,
+    get_scenario,
+    list_fabrics,
+    simulate,
+)
+from repro.core.interconnect import InterconnectSpec, resolve_fabric
+
+FAST = SimConfig(workgroups=12, n_cus=4)
+
+# small payloads keep the cycle-engine identity runs fast
+SMALL = dict(payload_bytes=1 << 16, writes_per_step=2)
+PRESETS = ("ring", "two_tier", "fat_tree", "rail_optimized", "torus2d")
+
+
+def _segments_key(report):
+    return sorted(
+        (s.device, s.wg, s.phase, round(s.start_ns, 6), round(s.end_ns, 6))
+        for s in report.segments
+    )
+
+
+def _spec_for(name: str, n: int, dpn, rng: random.Random) -> InterconnectSpec:
+    """A randomly-parameterized preset spec (shared by the property tests)."""
+    params = {}
+    if name == "fat_tree":
+        params = {
+            "oversubscription": rng.choice([1.0, 2.0, 3.5, 8.0]),
+            "nodes_per_leaf": rng.randint(1, 4),
+        }
+    elif name == "rail_optimized":
+        params = {"rails": rng.randint(1, max(1, dpn or 1))}
+    elif name == "torus2d":
+        divisors = [d for d in range(1, n + 1) if n % d == 0]
+        params = {"rows": rng.choice(divisors)}
+    return build_fabric(name, n, devices_per_node=dpn, **params)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_registry_lists_builtins():
+    names = list_fabrics()
+    for name in PRESETS:
+        assert name in names
+        assert get_fabric(name) is not None
+    with pytest.raises(KeyError) as e:
+        get_fabric("warp_drive")
+    assert "available" in str(e.value)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        build_fabric("two_tier", 8, devices_per_node=3)  # not a divisor
+    with pytest.raises(ValueError):
+        build_fabric("fat_tree", 8, devices_per_node=2, oversubscription=0.5)
+    with pytest.raises(ValueError):
+        build_fabric("rail_optimized", 8, devices_per_node=2, rails=5)
+    with pytest.raises(ValueError):
+        build_fabric("torus2d", 8, rows=3)  # 3 does not divide 8
+    spec = build_fabric("torus2d", 12, rows=3)
+    assert spec.params["cols"] == 4
+
+
+# ---------------------------------------------------------------------------
+# routing invariants (property tests over random specs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_routing_invariants_random_specs(seed):
+    """For random presets/shapes, every per-pair leg chain must (a) start at
+    the source device and end at the destination device with consecutive legs
+    sharing endpoints, and (b) ride only declared ports whose declared class
+    matches the leg's."""
+    rng = random.Random(seed)
+    name = rng.choice(PRESETS)
+    n = rng.choice([2, 3, 4, 6, 8, 12, 16, 24])
+    divisors = [d for d in range(1, n + 1) if n % d == 0]
+    dpn = rng.choice(divisors + [None])
+    spec = _spec_for(name, n, dpn, rng)
+    fm = FabricModel.from_spec(spec)
+    table = fm.route_table()
+    assert len(table) == n * (n - 1)
+    for (src, dst), legs in table.items():
+        assert legs, f"empty path {src}->{dst} on {spec.name}"
+        assert legs[0].src == ("dev", src)
+        assert legs[-1].dst == ("dev", dst)
+        for a, b in zip(legs, legs[1:]):
+            assert a.dst == b.src, f"disconnected chain {src}->{dst}: {legs}"
+        for leg in legs:
+            assert leg.hops >= 1
+            assert leg.port in spec.ports, f"undeclared port {leg.port}"
+            assert spec.ports[leg.port] == leg.cls
+            assert leg.cls in spec.link_classes
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_per_port_stats_sum_to_class_and_global_stats(seed):
+    """After random transfers (single and batched), the per-port counters
+    must sum to the per-class counters, and the per-class message count must
+    equal the total number of legs priced."""
+    rng = random.Random(100 + seed)
+    name = rng.choice(PRESETS)
+    n = rng.choice([4, 6, 8, 12, 24])
+    divisors = [d for d in range(1, n + 1) if n % d == 0]
+    spec = _spec_for(name, n, rng.choice(divisors), rng)
+    fm = FabricModel.from_spec(spec)
+    n_msgs = 0
+    n_legs = 0
+    total_leg_bytes = 0
+    for _ in range(150):
+        src = rng.randrange(n)
+        if rng.random() < 0.3:
+            dsts = [d for d in range(n) if d != src]
+            nbs = [rng.randrange(0, 4096) for _ in dsts]
+            fm.transfer_batch(src, dsts, nbs, rng.random() * 1e5)
+            n_msgs += len(dsts)
+            for d, nb in zip(dsts, nbs):
+                n_legs += len(fm.legs(src, d))
+                total_leg_bytes += len(fm.legs(src, d)) * nb
+        else:
+            dst = rng.randrange(n)
+            if dst == src:
+                continue
+            nb = rng.randrange(0, 4096)
+            fm.transfer(src, dst, nb, rng.random() * 1e5)
+            n_msgs += 1
+            n_legs += len(fm.legs(src, dst))
+            total_leg_bytes += len(fm.legs(src, dst)) * nb
+    st = fm.stats
+    assert st["messages"] == n_msgs
+    cls_msgs = {c: st[c + "_messages"] for c in spec.link_classes}
+    cls_bytes = {c: st[c + "_bytes"] for c in spec.link_classes}
+    cls_queued = {c: st[c + "_queued_ns"] for c in spec.link_classes}
+    assert sum(cls_msgs.values()) == n_legs
+    assert sum(cls_bytes.values()) == total_leg_bytes
+    # per-port sums == per-class sums, exactly (same float-add sequences
+    # cannot be guaranteed across groupings, so compare with a tolerance for
+    # the queued-ns float sums and exactly for the integer counters)
+    port_msgs = {c: 0 for c in spec.link_classes}
+    port_bytes = {c: 0 for c in spec.link_classes}
+    port_queued = {c: 0.0 for c in spec.link_classes}
+    for port, (m, b, q) in fm.port_stats.items():
+        c = spec.ports[port]
+        port_msgs[c] += m
+        port_bytes[c] += b
+        port_queued[c] += q
+    assert port_msgs == cls_msgs
+    assert port_bytes == cls_bytes
+    for c in spec.link_classes:
+        assert port_queued[c] == pytest.approx(cls_queued[c], rel=1e-9, abs=1e-6)
+
+
+def test_transfer_batch_matches_sequential_on_graph_presets():
+    """The vectorized same-issue pricing must stay bit-identical to
+    per-message calls on the new presets too (fast path and fallback)."""
+    rng = random.Random(7)
+    for name in PRESETS:
+        for n, dpn in ((24, 4), (8, 2)):
+            spec_a = _spec_for(name, n, dpn, random.Random(42))
+            spec_b = _spec_for(name, n, dpn, random.Random(42))
+            f_seq = FabricModel.from_spec(spec_a)
+            f_bat = FabricModel.from_spec(spec_b)
+            for _ in range(12):
+                src = rng.randrange(n)
+                dsts = [d for d in range(n) if d != src]
+                rng.shuffle(dsts)
+                nbs = [rng.randrange(0, 8192) for _ in dsts]
+                t = rng.random() * 1e5
+                seq = [
+                    f_seq.transfer(src, d, nb, t)
+                    for d, nb in zip(dsts, nbs)
+                ]
+                assert f_bat.transfer_batch(src, dsts, nbs, t) == seq, (
+                    name, n, dpn,
+                )
+            assert f_seq.stats == f_bat.stats, (name, n, dpn)
+
+
+# ---------------------------------------------------------------------------
+# link-class overrides: validated, never silently ignored
+# ---------------------------------------------------------------------------
+
+
+def test_link_override_unknown_class_is_actionable():
+    with pytest.raises(ValueError) as e:
+        build_fabric("two_tier", 8, devices_per_node=4, link_bw={"bogus": 5.0})
+    msg = str(e.value)
+    assert "bogus" in msg and "dci" in msg and "ici" in msg
+    # rail_optimized has no "dci" class: the legacy alias must say so
+    with pytest.raises(ValueError) as e:
+        build_fabric(
+            "rail_optimized", 8, devices_per_node=4, link_bw={"dci": 5.0}
+        )
+    assert "rail" in str(e.value)
+
+
+def test_from_topology_validates_overrides():
+    topo = Topology.two_tier(2, 4)
+    f = FabricModel.from_topology(topo, link_bw={"dci": 5.0})
+    assert f.spec.link_classes["dci"].bw_bytes_per_ns == 5.0
+    with pytest.raises(ValueError) as e:
+        FabricModel.from_topology(topo, link_bw={"nope": 5.0})
+    assert "nope" in str(e.value) and "valid classes" in str(e.value)
+    # unknown keyword overrides are rejected, not silently ignored
+    with pytest.raises(ValueError) as e:
+        FabricModel.from_topology(topo, dci_bw_gbps=5.0)
+    assert "dci_bw_gbps" in str(e.value)
+    # legacy scalar aliases keep working
+    f2 = FabricModel.from_topology(topo, dci_link_bw_bytes_per_ns=5.0)
+    assert f2.spec.link_classes["dci"].bw_bytes_per_ns == 5.0
+
+
+def test_scenario_link_bw_override_validated_end_to_end():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    with pytest.raises(ValueError) as e:
+        simulate(
+            "ring_allreduce", cfg, devices=8, closed_loop=True,
+            devices_per_node=4, link_bw={"warp": 1.0},
+        )
+    assert "warp" in str(e.value)
+    # a valid override slows the uplink and stretches the closed loop
+    base = simulate(
+        "ring_allreduce", cfg, devices=8, closed_loop=True,
+        devices_per_node=4, collect_segments=False,
+    )
+    slow = simulate(
+        "ring_allreduce", cfg, devices=8, closed_loop=True,
+        devices_per_node=4, link_bw={"dci": 12.5 / 8},
+        collect_segments=False,
+    )
+    assert slow.kernel_span_ns > base.kernel_span_ns
+    assert slow.traffic["nonflag_reads"] == base.traffic["nonflag_reads"]
+
+
+# ---------------------------------------------------------------------------
+# legacy bit-identity and preset selection
+# ---------------------------------------------------------------------------
+
+
+def test_named_presets_bit_identical_to_topology_derived_fabric():
+    """fabric="ring"/"two_tier" must reproduce the legacy topology-derived
+    closed loop bit for bit — the guarantee that keeps the committed BENCH
+    counters valid."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    legacy_flat = simulate("ring_allreduce", cfg, devices=6, closed_loop=True)
+    named_flat = simulate(
+        "ring_allreduce", cfg, devices=6, closed_loop=True, fabric="ring"
+    )
+    assert legacy_flat.traffic == named_flat.traffic
+    assert legacy_flat.kernel_span_ns == named_flat.kernel_span_ns
+    assert _segments_key(legacy_flat) == _segments_key(named_flat)
+
+    legacy_tier = simulate(
+        "all_to_all", cfg, devices=8, closed_loop=True, devices_per_node=4
+    )
+    named_tier = simulate(
+        "all_to_all", cfg, devices=8, closed_loop=True, devices_per_node=4,
+        fabric="two_tier",
+    )
+    assert legacy_tier.traffic == named_tier.traffic
+    assert legacy_tier.kernel_span_ns == named_tier.kernel_span_ns
+    assert _segments_key(legacy_tier) == _segments_key(named_tier)
+    assert named_tier.meta["fabric_name"] == "two_tier"
+
+
+@pytest.mark.parametrize("fabric", PRESETS)
+@pytest.mark.parametrize(
+    "name",
+    ["ring_allreduce", "all_to_all", "pipeline_p2p", "hierarchical_allreduce"],
+)
+def test_every_closed_loop_scenario_runs_on_every_preset(name, fabric):
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    kw = dict(SMALL) if "allreduce" in name else {}
+    r = simulate(
+        name, cfg, devices=8, closed_loop=True, devices_per_node=4,
+        fabric=fabric, collect_segments=False, **kw,
+    )
+    assert r.meta["fabric_name"] == fabric
+    fs = r.meta["fabric"]
+    assert fs["messages"] > 0
+    # per-link-class stats exist for exactly the declared classes
+    spec = build_fabric(fabric, 8, devices_per_node=4)
+    for c in spec.link_classes:
+        assert c + "_messages" in fs
+    assert sum(fs[c + "_messages"] for c in spec.link_classes) >= fs["messages"]
+
+
+def test_fat_tree_oversubscription_slows_cross_leaf_traffic():
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    kw = dict(devices=8, closed_loop=True, devices_per_node=2,
+              collect_segments=False)
+    r1 = simulate("all_to_all", cfg, fabric=build_fabric(
+        "fat_tree", 8, devices_per_node=2, oversubscription=1.0), **kw)
+    r8 = simulate("all_to_all", cfg, fabric=build_fabric(
+        "fat_tree", 8, devices_per_node=2, oversubscription=8.0), **kw)
+    assert r8.kernel_span_ns > r1.kernel_span_ns
+    assert r8.meta["fabric"]["spine_messages"] == (
+        r1.meta["fabric"]["spine_messages"]
+    )
+    # structural counters cannot move (flag_reads may: SPIN polls longer)
+    assert r8.traffic["nonflag_reads"] == r1.traffic["nonflag_reads"]
+    assert r8.wtt_enacted == r1.wtt_enacted
+
+
+def test_rail_optimized_beats_single_uplink_on_incast():
+    """k NICs per node drain the all_to_all incast faster than one gateway
+    uplink — the rail-optimized design point."""
+    cfg = FAST.with_(engine=EngineKind.EVENT)
+    kw = dict(devices=8, closed_loop=True, devices_per_node=4,
+              collect_segments=False)
+    tier = simulate("all_to_all", cfg, fabric="two_tier", **kw)
+    rail = simulate("all_to_all", cfg, fabric="rail_optimized", **kw)
+    assert rail.kernel_span_ns < tier.kernel_span_ns
+    assert rail.traffic["nonflag_reads"] == tier.traffic["nonflag_reads"]
+    assert rail.wtt_enacted == tier.wtt_enacted
+    # rail-aligned pairs cross with zero intra hops: strictly fewer ICI legs
+    assert (
+        rail.meta["fabric"]["ici_messages"]
+        < tier.meta["fabric"]["ici_messages"]
+    )
+
+
+def test_cluster_accepts_preset_name_and_spec():
+    cfg = FAST.with_(engine=EngineKind.EVENT).with_devices(8)
+    sc = get_scenario("ring_allreduce")(cfg, closed_loop=True, **SMALL)
+    by_name = Cluster(cfg, sc, fabric="torus2d").run()
+    sc2 = get_scenario("ring_allreduce")(cfg, closed_loop=True, **SMALL)
+    by_spec = Cluster(cfg, sc2, fabric=build_fabric("torus2d", 8)).run()
+    assert by_name.traffic == by_spec.traffic
+    assert by_name.kernel_span_ns == by_spec.kernel_span_ns
+    with pytest.raises(ValueError):
+        Cluster(cfg, sc, fabric=build_fabric("torus2d", 12))  # wrong size
+    # a named preset on a *flat* scenario must not degenerate to one node:
+    # fat_tree falls back to its own default (one-device nodes), so the
+    # spine actually carries traffic
+    sc3 = get_scenario("ring_allreduce")(cfg, closed_loop=True, **SMALL)
+    flat_ft = Cluster(cfg, sc3, fabric="fat_tree").run()
+    assert flat_ft.meta["n_nodes"] == 8
+    assert flat_ft.meta["fabric"]["spine_messages"] > 0
+
+
+def test_resolve_fabric_passthrough_and_default():
+    assert resolve_fabric(None, 8) is None
+    spec = resolve_fabric(None, 8, link_bw={"ici": 25.0})
+    assert spec is not None and spec.name == "ring"
+    assert spec.link_classes["ici"].bw_bytes_per_ns == 25.0
+    spec2 = resolve_fabric(
+        None, 8, devices_per_node=4, link_bw={"dci": 2.0}
+    )
+    assert spec2.name == "two_tier"
+    with pytest.raises(ValueError):
+        resolve_fabric(build_fabric("ring", 8), 12)
+
+
+# ---------------------------------------------------------------------------
+# cycle/event bit-identity on a non-ring preset
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fabric", ["fat_tree", "rail_optimized"])
+def test_cycle_event_bit_identity_on_graph_preset(fabric):
+    reports = {}
+    for eng in (EngineKind.CYCLE, EngineKind.EVENT):
+        cfg = FAST.with_(engine=eng)
+        reports[eng] = simulate(
+            "hierarchical_allreduce", cfg, devices=8, devices_per_node=2,
+            fabric=fabric, **SMALL,
+        )
+    a, b = reports[EngineKind.CYCLE], reports[EngineKind.EVENT]
+    assert a.traffic == b.traffic
+    assert a.per_device == b.per_device
+    assert a.kernel_span_ns == pytest.approx(b.kernel_span_ns)
+    assert _segments_key(a) == _segments_key(b)
+
+
+# ---------------------------------------------------------------------------
+# WTT.register_many
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_register_many_bit_identical_to_sequential(seed):
+    """Batched registration must pop exactly what per-write registration
+    would: same (cycle, seq) groups, same stats, interleaved with singles."""
+    rng = random.Random(seed)
+    a = WriteTrackingTable(clock_ghz=1.5)
+    b = WriteTrackingTable(clock_ghz=1.5)
+    i = 0
+    for _ in range(20):
+        ws = [
+            RegisteredWrite(
+                wakeup_ns=rng.random() * 1e4,
+                addr=64 * (i + j),
+                data=i + j,
+                seq=i + j,
+            )
+            for j in range(rng.randrange(0, 12))
+        ]
+        i += len(ws)
+        if rng.random() < 0.5 and len(ws) == 1:
+            a.register(ws[0])
+        else:
+            a.register_many(ws)
+        for w in ws:
+            b.register(w)
+    assert a.stats.registered == b.stats.registered == i
+    assert a.stats.max_pending == b.stats.max_pending
+    while True:
+        ca, ga = a.pop_next_group()
+        cb, gb = b.pop_next_group()
+        assert ca == cb
+        assert [w.seq for w in ga] == [w.seq for w in gb]
+        if ca is None:
+            break
+
+
+def test_register_many_fires_calendar_hook_with_earliest_cycle():
+    wtt = WriteTrackingTable(clock_ghz=1.0)
+    seen = []
+    wtt.on_register = seen.append
+    wtt.register_many(
+        [
+            RegisteredWrite(wakeup_ns=t, addr=64, data=1, seq=s)
+            for s, t in enumerate([500.0, 100.0, 900.0])
+        ]
+    )
+    assert seen == [100]
+    wtt.register_many([])
+    assert seen == [100]
