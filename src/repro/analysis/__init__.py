@@ -1,0 +1,39 @@
+"""EidolaSan: static verification and runtime sanitization of scenarios.
+
+Two halves that cross-check each other:
+
+* :func:`verify_scenario` lowers a scenario's phase programs into an
+  inter-rank wait/emit graph (:class:`ProgramGraph`) and checks it — deadlock
+  cycles with full blame chains, unmatched synchronization, flag-slot write
+  races, fabric reachability — in milliseconds, before any simulation.
+* :class:`TrafficSanitizer` (enabled via ``Cluster(sanitize=True)`` or
+  ``simulate(..., sanitize=True)``) shadows a closed-loop run and asserts
+  byte conservation, calendar monotonicity, and exactly-once flag delivery.
+
+``python -m repro.analysis`` verifies every registered scenario against every
+fabric preset (the CI gate).
+"""
+
+from .program_graph import EmitSite, Lane, ProgramGraph, WaitSite
+from .sanitize import SanitizerError, TrafficSanitizer
+from .verify import (
+    Finding,
+    Verdict,
+    diagnose_deadlock,
+    verify_graph,
+    verify_scenario,
+)
+
+__all__ = [
+    "EmitSite",
+    "Lane",
+    "ProgramGraph",
+    "WaitSite",
+    "SanitizerError",
+    "TrafficSanitizer",
+    "Finding",
+    "Verdict",
+    "diagnose_deadlock",
+    "verify_graph",
+    "verify_scenario",
+]

@@ -1,0 +1,66 @@
+"""Verify every registered scenario against every fabric preset.
+
+The CI gate: ``python -m repro.analysis`` statically checks all built-in
+(and any registered) scenarios on the flat fabric and on each interconnect
+preset, without running a single simulated cycle.  Exits non-zero if any
+combination produces an error-severity finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.core.interconnect import list_fabrics
+from repro.core.scenario import list_scenarios
+
+from .verify import verify_scenario
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify all scenarios x all fabric presets",
+    )
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--devices-per-node", type=int, default=2)
+    ap.add_argument(
+        "-q", "--quiet", action="store_true",
+        help="print only failing combinations",
+    )
+    args = ap.parse_args(argv)
+
+    failures = 0
+    combos = 0
+    for name in list_scenarios():
+        for fabric in [None, *list_fabrics()]:
+            params = {"closed_loop": True}
+            if fabric is not None:
+                params["fabric"] = fabric
+            try:
+                verdict = verify_scenario(
+                    name,
+                    devices=args.devices,
+                    devices_per_node=args.devices_per_node,
+                    **params,
+                )
+            except TypeError:
+                # open-loop-only scenario (no closed_loop/fabric knobs):
+                # verify its single modeled rank once, without presets
+                if fabric is not None:
+                    continue
+                verdict = verify_scenario(name, devices=args.devices)
+            combos += 1
+            if not verdict.ok:
+                failures += 1
+            if not verdict.ok or not args.quiet:
+                print(verdict.render())
+    tag = "FAILED" if failures else "ok"
+    print(f"verified {combos} scenario x fabric combinations: {tag}"
+          + (f" ({failures} with errors)" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

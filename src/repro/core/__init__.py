@@ -56,4 +56,15 @@ __all__ = [
     "resolve_fabric",
     "GemvAllReduceWorkload", "make_gemv_allreduce_traces",
     "WriteTrackingTable",
+    "verify_scenario",
 ]
+
+
+def __getattr__(name):
+    # PEP 562 lazy re-export: repro.analysis imports repro.core.cluster, so
+    # a top-level import here would be circular
+    if name == "verify_scenario":
+        from repro.analysis import verify_scenario
+
+        return verify_scenario
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

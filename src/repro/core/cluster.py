@@ -41,10 +41,69 @@ from .target import TargetDevice
 from .topology import V5E, FabricModel, Topology
 from .wtt import WriteTrackingTable
 
-__all__ = ["Cluster", "ClusterNode"]
+__all__ = ["Cluster", "ClusterNode", "resolve_cluster_fabric"]
 
 # perturb may be one object applied to every device, or a per-device mapping
 PerturbLike = Union[None, object, Dict[int, object]]
+
+
+def resolve_cluster_fabric(
+    cfg: SimConfig,
+    scenario: Scenario,
+    fabric: Union[None, str, InterconnectSpec, FabricModel] = None,
+    topology: Optional[Topology] = None,
+) -> FabricModel:
+    """The fabric a cluster run of ``scenario`` would route over.
+
+    Priority order (shared by :class:`Cluster` and the static verifier's
+    reachability check, so both always see the same fabric): an explicit
+    ``fabric`` argument (ready :class:`FabricModel`, an
+    :class:`InterconnectSpec`, or a registered preset name), then the
+    scenario's ``interconnect`` spec, then its :class:`Topology`, then the
+    flat single-tier ring over ``cfg.n_devices``.
+    """
+    topo = topology or getattr(scenario, "topology", None)
+    if fabric is None:
+        spec = getattr(scenario, "interconnect", None)
+        if spec is not None:
+            fabric = FabricModel.from_spec(spec)
+        elif topo is not None:
+            if topo.n_chips != cfg.n_devices:
+                raise ValueError(
+                    f"topology spans {topo.n_chips} chips but the cluster "
+                    f"simulates {cfg.n_devices} devices"
+                )
+            fabric = FabricModel.from_topology(topo)
+        else:
+            fabric = FabricModel(
+                cfg.n_devices, hw=getattr(scenario, "hw", V5E)
+            )
+    elif isinstance(fabric, str):
+        # forward the scenario's node split only when it has one; a flat
+        # topology (n_nodes == 1) leaves the preset's own default (e.g.
+        # one-device nodes for fat_tree/rail_optimized) so a named
+        # fabric never silently degenerates to a single node
+        dpn = (
+            topo.devices_per_node
+            if topo is not None and topo.n_nodes > 1
+            else None
+        )
+        fabric = FabricModel.from_spec(
+            build_fabric(
+                fabric,
+                cfg.n_devices,
+                getattr(scenario, "hw", V5E),
+                devices_per_node=dpn,
+            )
+        )
+    elif isinstance(fabric, InterconnectSpec):
+        fabric = FabricModel.from_spec(fabric)
+    if fabric.n_devices != cfg.n_devices:
+        raise ValueError(
+            f"fabric models {fabric.n_devices} devices but the cluster "
+            f"simulates {cfg.n_devices}"
+        )
+    return fabric
 
 
 @dataclass
@@ -93,54 +152,25 @@ class Cluster:
         fabric: Union[None, str, InterconnectSpec, FabricModel] = None,
         topology: Optional[Topology] = None,
         cohorts: bool = True,
+        sanitize: bool = False,
     ):
         self.cfg = cfg.validate()
         self.scenario = scenario
         self.amap = scenario.amap
         self.perturb = perturb
         self.collect_segments = collect_segments
-        topo = topology or getattr(scenario, "topology", None)
-        if fabric is None:
-            spec = getattr(scenario, "interconnect", None)
-            if spec is not None:
-                fabric = FabricModel.from_spec(spec)
-            elif topo is not None:
-                if topo.n_chips != cfg.n_devices:
-                    raise ValueError(
-                        f"topology spans {topo.n_chips} chips but the cluster "
-                        f"simulates {cfg.n_devices} devices"
-                    )
-                fabric = FabricModel.from_topology(topo)
-            else:
-                fabric = FabricModel(
-                    cfg.n_devices, hw=getattr(scenario, "hw", V5E)
-                )
-        elif isinstance(fabric, str):
-            # forward the scenario's node split only when it has one; a flat
-            # topology (n_nodes == 1) leaves the preset's own default (e.g.
-            # one-device nodes for fat_tree/rail_optimized) so a named
-            # fabric never silently degenerates to a single node
-            dpn = (
-                topo.devices_per_node
-                if topo is not None and topo.n_nodes > 1
-                else None
+        self.fabric = resolve_cluster_fabric(
+            self.cfg, scenario, fabric=fabric, topology=topology
+        )
+        if sanitize:
+            # late import: repro.analysis imports this module
+            from repro.analysis.sanitize import TrafficSanitizer
+
+            self._san = TrafficSanitizer(
+                self.amap, self.fabric, cfg.n_devices
             )
-            fabric = FabricModel.from_spec(
-                build_fabric(
-                    fabric,
-                    cfg.n_devices,
-                    getattr(scenario, "hw", V5E),
-                    devices_per_node=dpn,
-                )
-            )
-        elif isinstance(fabric, InterconnectSpec):
-            fabric = FabricModel.from_spec(fabric)
-        if fabric.n_devices != cfg.n_devices:
-            raise ValueError(
-                f"fabric models {fabric.n_devices} devices but the cluster "
-                f"simulates {cfg.n_devices}"
-            )
-        self.fabric = fabric
+        else:
+            self._san = None
         self._seq = itertools.count()
         # (src_device, phase_idx, emit_idx) -> completions seen (coalescing)
         self._emit_counts: Dict[tuple, int] = {}
@@ -170,6 +200,8 @@ class Cluster:
                 cohorts=cohorts,
             )
             wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
+            if self._san is not None:
+                memory.add_write_observer(self._san.observer_for(d))
             self.nodes.append(ClusterNode(d, memory, monitor, target, wtt))
 
         # seed traces (the open-loop degenerate case / warm-start writes) get
@@ -182,6 +214,8 @@ class Cluster:
                 p = self._perturb_for(node.device_id)
                 if p is not None:
                     eff = p.jitter_write(eff)
+                if self._san is not None:
+                    self._san.note_seed_write(node.device_id, eff.addr)
                 node.wtt.register(eff)
 
     # ------------------------------------------------------------------
@@ -235,9 +269,20 @@ class Cluster:
         # the flag write itself is fabric traffic out of the emitting device;
         # payload bytes are accounted by the phase's own TrafficOps
         self.nodes[src].memory.issue_xgmi_out(1, bytes_each=op.size)
+        issue_ns = cfg.cycles_to_ns(cycle)
         arrival_ns = self.fabric.transfer(
-            src, op.dst, op.payload_bytes + op.size, cfg.cycles_to_ns(cycle)
+            src, op.dst, op.payload_bytes + op.size, issue_ns
         )
+        if self._san is not None:
+            self._san.note_emission(
+                src,
+                op.dst,
+                op.addr if op.addr is not None
+                else self.amap.flag_addr(src, op.slot),
+                op.payload_bytes + op.size,
+                issue_ns,
+                arrival_ns,
+            )
         self.nodes[op.dst].wtt.register_many(
             self._emit_writes(src, op, arrival_ns, cycle)
         )
@@ -265,12 +310,24 @@ class Cluster:
         mem = self.nodes[src].memory
         for op in ops:
             mem.issue_xgmi_out(1, bytes_each=op.size)
+        issue_ns = cfg.cycles_to_ns(cycle)
         arrivals = self.fabric.transfer_batch(
             src,
             [op.dst for op in ops],
             [op.payload_bytes + op.size for op in ops],
-            cfg.cycles_to_ns(cycle),
+            issue_ns,
         )
+        if self._san is not None:
+            for op, arrival_ns in zip(ops, arrivals):
+                self._san.note_emission(
+                    src,
+                    op.dst,
+                    op.addr if op.addr is not None
+                    else self.amap.flag_addr(src, op.slot),
+                    op.payload_bytes + op.size,
+                    issue_ns,
+                    arrival_ns,
+                )
         # writes are built in emission order (Cluster seqs identical to the
         # per-op path) and grouped per destination WTT; within one table the
         # batch preserves that order, so reg_nos — the pop tie-break — are
@@ -357,6 +414,8 @@ class Cluster:
             CyclePollEngine() if cfg.engine == EngineKind.CYCLE else EventQueueEngine()
         )
         res = engine.run_nodes([(n.target, n.wtt) for n in self.nodes])
+        if self._san is not None:
+            self._san.check()
 
         traffic: Dict[str, int] = {}
         per_device: Dict[int, Dict[str, int]] = {}
@@ -393,6 +452,7 @@ class Cluster:
             segments=segments,
             meta={
                 "closed_loop": True,
+                "sanitized": self._san is not None,
                 "device_spans_ns": spans,
                 "fabric": dict(self.fabric.stats),
                 "fabric_name": self.fabric.spec.name,

@@ -84,6 +84,21 @@ def _deadlock_message(nodes: Sequence[Node], cycle: int) -> str:
     return msg + " (missing peer flag writes in the trace, or an EmitOp never fired?)"
 
 
+def _deadlock_error(nodes: Sequence[Node], cycle: int) -> EidolaDeadlock:
+    """Build the empty-queue deadlock error, with the static analyzer's
+    blame-chain diagnosis embedded when one can be computed."""
+    msg = _deadlock_message(nodes, cycle)
+    diagnosis = None
+    try:
+        # late import: repro.analysis imports core modules
+        from repro.analysis import diagnose_deadlock
+
+        diagnosis = diagnose_deadlock(nodes[0][0].scenario)
+    except Exception:  # diagnosis is best-effort; never mask the deadlock
+        diagnosis = None
+    return EidolaDeadlock(msg, diagnosis=diagnosis)
+
+
 def _all_idle(nodes: Sequence[Node]) -> bool:
     return all(dev.all_done and wtt.empty for dev, wtt in nodes)
 
@@ -134,7 +149,7 @@ class CyclePollEngine:
                 and all(wtt.empty for _, wtt in nodes)
                 and not all(dev.all_done for dev, _ in nodes)
             ):
-                raise EidolaDeadlock(_deadlock_message(nodes, cycle))
+                raise _deadlock_error(nodes, cycle)
         return EngineResult(
             sim_cycles=max(cycle, 0),
             wall_time_s=time.perf_counter() - t0,
@@ -212,7 +227,7 @@ class EventQueueEngine:
                 if nxt is None:
                     if all(dev.all_done for dev, _ in nodes):
                         break
-                    raise EidolaDeadlock(_deadlock_message(nodes, last_cycle))
+                    raise _deadlock_error(nodes, last_cycle)
 
                 # gather every node with an event at nxt (dedupe duplicates)
                 due_wtt: set = set()

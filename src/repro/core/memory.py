@@ -53,6 +53,43 @@ class AddressMap:
     partial_base: int = 0x3F_E000_000
     data_base: int = 0x100_000
 
+    def claim_flag_slots(self, label: str, pairs) -> None:
+        """Register ``(device, slot)`` flag allocations under ``label``.
+
+        Scenario builders call this for every slot range they lay out, so a
+        collision — two different allocation sites landing on the same
+        ``(device, slot)`` — fails loudly at scenario-construction time with
+        both owners named, instead of surfacing as confusing runtime behavior
+        (a flag satisfied by the wrong stage).  Re-claiming a pair under the
+        same label is idempotent (builders may run per rank).
+        """
+        claims = self.__dict__.get("_slot_claims")
+        if claims is None:
+            # the dataclass is frozen; the claim registry is bookkeeping, not
+            # layout state, so it lives outside the declared fields
+            claims = {}
+            object.__setattr__(self, "_slot_claims", claims)
+        for device, slot in pairs:
+            if not (0 <= device < self.n_devices):
+                raise ValueError(
+                    f"flag-slot claim {label!r}: device {device} out of "
+                    f"range for {self.n_devices} devices"
+                )
+            if not (0 <= slot < self.flag_slots):
+                raise ValueError(
+                    f"flag-slot claim {label!r}: slot {slot} out of range "
+                    f"(flag_slots={self.flag_slots})"
+                )
+            owner = claims.get((device, slot))
+            if owner is not None and owner != label:
+                raise ValueError(
+                    f"flag slot collision: (device={device}, slot={slot}) "
+                    f"already allocated to {owner!r}, now claimed by "
+                    f"{label!r} — give each synchronization stage its own "
+                    "slot range"
+                )
+            claims[(device, slot)] = label
+
     def flag_addr(self, src_device: int, slot: int = 0) -> int:
         """Address of ``flags[slot][src_device]`` in the target's memory."""
         if not (0 <= src_device < self.n_devices):

@@ -437,6 +437,7 @@ def simulate(
     devices: Optional[int] = None,
     nodes: Optional[int] = None,
     devices_per_node: Optional[int] = None,
+    sanitize: bool = False,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -471,6 +472,12 @@ def simulate(
     routed over the fabric); otherwise the single-detailed-device
     :class:`repro.core.simulator.Eidola` replay path is used.  Both return a
     :class:`repro.core.simulator.Report`.
+
+    ``sanitize=True`` (closed loop only) runs the
+    :class:`repro.analysis.sanitize.TrafficSanitizer` alongside the engines:
+    byte conservation, calendar monotonicity, and exactly-once flag delivery
+    are asserted at the end of the run (raising ``SanitizerError`` on
+    violation) without perturbing any simulated state.
     """
     from .simulator import Eidola  # late import: simulator imports target
 
@@ -495,8 +502,17 @@ def simulate(
         from .cluster import Cluster  # late import: cluster imports target
 
         return Cluster(
-            cfg, sc, perturb=perturb, collect_segments=collect_segments
+            cfg,
+            sc,
+            perturb=perturb,
+            collect_segments=collect_segments,
+            sanitize=sanitize,
         ).run()
+    if sanitize:
+        raise ValueError(
+            "sanitize=True requires a closed-loop scenario (the sanitizer "
+            "shadows the cluster's fabric and directory accounting)"
+        )
     return Eidola(
         cfg,
         sc.traces(),

@@ -80,6 +80,10 @@ class AllToAllScenario(Scenario):
             devices_per_node=devices_per_node, hw=hw, fabric=fabric,
             link_bw=link_bw,
         )
+        # every rank announces dispatch completion in its slot-0 column
+        self.amap.claim_flag_slots(
+            "a2a_dispatch_barrier", ((d, 0) for d in range(k))
+        )
         self.cost = Topology.flat_ring(k, axis="ep", hw=hw).collective(
             "all-to-all", self.payload_bytes, "ep"
         )

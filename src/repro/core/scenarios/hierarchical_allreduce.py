@@ -108,6 +108,31 @@ class HierarchicalAllReduceScenario(Scenario):
             devices_per_node=devices_per_node, hw=hw, fabric=fabric,
             link_bw=link_bw,
         )
+        # the four stages get disjoint slot ranges; a collision here means
+        # the layout arithmetic above regressed
+        devs = range(n)
+        if dpn > 1:
+            self.amap.claim_flag_slots(
+                "hier_intra_ring",
+                ((d, s) for d in devs for s in range(dpn - 1)),
+            )
+            self.amap.claim_flag_slots(
+                "hier_shard_handoff", ((d, dpn - 1) for d in devs)
+            )
+        if self.n_nodes > 1:
+            self.amap.claim_flag_slots(
+                "hier_leader_ring",
+                (
+                    (d, s)
+                    for d in devs
+                    for s in range(
+                        self.leader_slot_base, self.bcast_slot
+                    )
+                ),
+            )
+        self.amap.claim_flag_slots(
+            "hier_broadcast", ((d, self.bcast_slot) for d in devs)
+        )
         self.params = {
             "payload_bytes": self.payload_bytes,
             "devices_per_node": self.devices_per_node,

@@ -87,6 +87,11 @@ class RingAllReduceScenario(Scenario):
             devices_per_node=devices_per_node, hw=hw, fabric=fabric,
             link_bw=link_bw,
         )
+        # one flag slot per ring step, every rank writing its own column
+        self.amap.claim_flag_slots(
+            "ring_step",
+            ((d, s) for d in range(k) for s in range(self.steps)),
+        )
         # Open-loop cadence keeps the flat single-ring collective algebra the
         # trace schedule was always derived from.
         self.cost = Topology.flat_ring(k, axis="ring", hw=hw).collective(

@@ -63,7 +63,18 @@ __all__ = ["TargetDevice", "EidolaDeadlock"]
 
 
 class EidolaDeadlock(RuntimeError):
-    """Raised when all workgroups are blocked and no pending writes remain."""
+    """Raised when all workgroups are blocked and no pending writes remain.
+
+    ``diagnosis`` carries the static analyzer's explanation of the wait-for
+    cycle (blame chains from :func:`repro.analysis.diagnose_deadlock`) when
+    one could be computed; it is appended to the message.
+    """
+
+    def __init__(self, message: str, *, diagnosis: "str | None" = None):
+        self.diagnosis = diagnosis
+        if diagnosis:
+            message = f"{message}\n{diagnosis}"
+        super().__init__(message)
 
 
 @dataclass
@@ -407,34 +418,34 @@ class TargetDevice:
                 c.blocked_on = addr
                 self._spin_waiters.setdefault(addr, set()).add(c.idx)
                 return
-            else:  # SYNCMON (members share jitter class -> identical state)
-                # one check read per member (sees unset or not-yet-visible)
+            # SYNCMON (members share jitter class -> identical state):
+            # one check read per member (sees unset or not-yet-visible)
+            self.memory.bulk_reads(n, bytes_each=8, flag=True)
+            t_arm = c.t_cursor + cfg.monitor_arm_cycles
+            if set_c is not None and set_c <= t_arm:
+                # race window: write landed between check and mwait; the
+                # mwait returns immediately after its own validation read
                 self.memory.bulk_reads(n, bytes_each=8, flag=True)
-                t_arm = c.t_cursor + cfg.monitor_arm_cycles
-                if set_c is not None and set_c <= t_arm:
-                    # race window: write landed between check and mwait; the
-                    # mwait returns immediately after its own validation read
-                    self.memory.bulk_reads(n, bytes_each=8, flag=True)
-                    if self.monitor_log is not None:
-                        self.monitor_log.stats["immediate_mwait_returns"] += n
-                    c.t_cursor = t_arm + cfg.flag_check_cycles
-                    c.flag_idx += 1
-                    continue
-                # arm + deschedule: every member arms its own monitor (one
-                # Monitor Log row each in the per-workgroup interpreter; a
-                # multi-member cohort shares one row but accounts the same
-                # number of armings, and all members wake together)
-                entry = self.monitor_log.monitor(addr, 8, 1)
-                for wg in c.members:
-                    entry.waiting_wfs.add(wg)
-                    self._armed[wg] = entry
-                if n > 1:
-                    self.monitor_log.stats["monitors_armed"] += n - 1
-                c.blocked_on = addr
-                c.in_mwait = True
-                c.t_arm = t_arm
-                c.desched_segments.append((t_arm, -1))  # end filled on wake
-                return
+                if self.monitor_log is not None:
+                    self.monitor_log.stats["immediate_mwait_returns"] += n
+                c.t_cursor = t_arm + cfg.flag_check_cycles
+                c.flag_idx += 1
+                continue
+            # arm + deschedule: every member arms its own monitor (one
+            # Monitor Log row each in the per-workgroup interpreter; a
+            # multi-member cohort shares one row but accounts the same
+            # number of armings, and all members wake together)
+            entry = self.monitor_log.monitor(addr, 8, 1)
+            for wg in c.members:
+                entry.waiting_wfs.add(wg)
+                self._armed[wg] = entry
+            if n > 1:
+                self.monitor_log.stats["monitors_armed"] += n - 1
+            c.blocked_on = addr
+            c.in_mwait = True
+            c.t_arm = t_arm
+            c.desched_segments.append((t_arm, -1))  # end filled on wake
+            return
         # all flags observed — wait phase completes at the poll cursor
         end = c.t_cursor
         self._complete_phase(c, spec, c.wait_start, end)

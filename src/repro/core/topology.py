@@ -333,7 +333,7 @@ class FabricModel:
         self._busy_until_ns: Dict[Tuple, float] = {}
         self.stats = self._fresh_stats()
         # egress port -> [messages, bytes, queued_ns]
-        self.port_stats: Dict[Tuple, List[float]] = {}
+        self.port_stats: Dict[Tuple, List[float]] = self._fresh_port_stats()
 
     @classmethod
     def from_spec(cls, spec: InterconnectSpec) -> "FabricModel":
@@ -396,17 +396,25 @@ class FabricModel:
     def _fresh_stats(self) -> Dict[str, float]:
         st: Dict[str, float] = {"messages": 0, "bytes": 0, "queued_ns": 0.0}
         # per-class leg counters (a multi-leg message counts one leg per
-        # class it traverses; totals above count each message once)
-        for name in self.spec.link_classes:
+        # class it traverses; totals above count each message once), in
+        # sorted class order so stats dicts diff stably across runs
+        for name in sorted(self.spec.link_classes):
             st[name + "_messages"] = 0
             st[name + "_bytes"] = 0
             st[name + "_queued_ns"] = 0.0
         return st
 
+    def _fresh_port_stats(self) -> Dict[Tuple, List[float]]:
+        # every declared egress port pre-seeded at zero, in deterministic
+        # order (port keys mix ints and strs, so sort by repr); ports a
+        # routing policy synthesizes outside the declaration still appear on
+        # first touch, after the declared block
+        return {p: [0, 0, 0.0] for p in sorted(self.spec.ports, key=repr)}
+
     def reset(self) -> None:
         self._busy_until_ns.clear()
         self.stats = self._fresh_stats()
-        self.port_stats = {}
+        self.port_stats = self._fresh_port_stats()
 
     # ------------------------------------------------------------------
     # routing

@@ -18,6 +18,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.scenario --scenario ring_allreduce \
       --devices 8 --nodes 4 --detailed all --fabric fat_tree \
       --link spine=3.125
+  PYTHONPATH=src python -m repro.launch.scenario --scenario ring_allreduce \
+      --devices 8 --detailed all --verify
+  PYTHONPATH=src python -m repro.launch.scenario --scenario all_to_all \
+      --devices 8 --detailed all --sanitize
 
 ``-p/--param key=value`` sets a scenario constructor parameter or a SimConfig
 field for a single run; ``--sweep key=v1,v2,...`` builds a grid handled by
@@ -144,6 +148,16 @@ def main(argv=None) -> int:
     ap.add_argument("--detailed", default="0", choices=["0", "all"],
                     help="'all': closed-loop cluster, every device detailed; "
                          "'0': open-loop replay with one detailed device")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify the scenario's phase programs "
+                         "(deadlock cycles, unmatched sync, slot races, "
+                         "fabric reachability) instead of simulating; exits "
+                         "non-zero with the diagnosis on a broken program")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the traffic sanitizer alongside the engines "
+                         "(byte conservation, calendar monotonicity, "
+                         "exactly-once flag delivery); requires "
+                         "--detailed all")
     ap.add_argument("-p", "--param", action="append", default=[],
                     metavar="KEY=VALUE",
                     help="scenario parameter or SimConfig override")
@@ -237,6 +251,22 @@ def main(argv=None) -> int:
     except ValueError as e:
         raise SystemExit(f"error: {e}")
 
+    if args.verify:
+        from repro.analysis import verify_scenario
+
+        try:
+            verdict = verify_scenario(args.scenario, base_cfg, **sc_params)
+        except (NotImplementedError, TypeError, ValueError) as e:
+            raise SystemExit(f"error: {e}")
+        print(verdict.render())
+        return 0 if verdict.ok else 1
+
+    if args.sanitize and args.detailed != "all":
+        raise SystemExit(
+            "error: --sanitize requires --detailed all (the sanitizer "
+            "shadows the closed-loop cluster)"
+        )
+
     if args.sweep:
         grid = _parse_kv(args.sweep, split_values=True)
         runner = SweepRunner(args.scenario, base_cfg, engines=engines)
@@ -261,7 +291,7 @@ def main(argv=None) -> int:
         cfg = base_cfg.with_(engine=eng)
         try:
             report = simulate(args.scenario, cfg, collect_segments=False,
-                              **sc_params)
+                              sanitize=args.sanitize, **sc_params)
         except KeyError as e:  # unknown fabric preset via -p fabric=...
             raise SystemExit(f"error: {e.args[0]}")
         except (NotImplementedError, TypeError, ValueError) as e:

@@ -1,0 +1,595 @@
+"""EidolaSan: the static verifier and the runtime traffic sanitizer.
+
+Covers the acceptance bar of the analysis subsystem: every built-in scenario
+verifies cleanly on every fabric preset; each seeded mutation class (wait-for
+cycle, unmatched emit/wait, slot race, unreachable pair) is detected without
+running the simulator; the static deadlock verdict matches the runtime
+``EidolaDeadlock`` outcome on deterministic (and, when hypothesis is
+installed, randomized) program mutations; and ``sanitize=True`` runs are
+bit-identical to the committed multi-device bench rows while still catching
+injected accounting violations.
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.analysis import (
+    ProgramGraph,
+    SanitizerError,
+    TrafficSanitizer,
+    verify_scenario,
+)
+from repro.core import (
+    AddressMap,
+    EidolaDeadlock,
+    EngineKind,
+    FabricModel,
+    SimConfig,
+    list_fabrics,
+    list_scenarios,
+    simulate,
+)
+from repro.core.cluster import Cluster, resolve_cluster_fabric
+from repro.core.events import TraceBundle
+from repro.core.scenario import (
+    EmitOp,
+    PhaseSpec,
+    Scenario,
+    WGProgram,
+    get_scenario,
+)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# helpers: a tiny closed-loop scenario builder and a program mutator
+# ---------------------------------------------------------------------------
+
+
+class _ProgramScenario(Scenario):
+    """Closed-loop scenario whose per-rank phases come from a callback."""
+
+    name = "program_scenario"
+    closed_loop = True
+
+    def __init__(self, cfg, phases_fn, amap=None):
+        super().__init__(cfg, amap)
+        self._phases_fn = phases_fn
+
+    def programs_for(self, device):
+        shared = tuple(self._phases_fn(self, device))
+        return [
+            WGProgram(wg=w, cu=w, dispatch_cycle=0, phases=shared)
+            for w in range(self.cfg.workgroups)
+        ]
+
+    def programs(self):
+        return self.programs_for(0)
+
+    def traces(self):
+        return TraceBundle()
+
+
+class _MutatedScenario(Scenario):
+    """Wrap a built scenario, rewriting one rank's shared phase tuple."""
+
+    name = "mutated"
+
+    def __init__(self, inner, mutate):
+        self.inner = inner
+        self.cfg = inner.cfg
+        self.amap = inner.amap
+        self.params = dict(inner.params)
+        self.closed_loop = inner.closed_loop
+        self.topology = inner.topology
+        self.interconnect = inner.interconnect
+        self.fabric_name = inner.fabric_name
+        self.name = inner.name + "+mutated"
+        self._mutate = mutate
+        self._shared = {}
+
+    def programs_for(self, device):
+        progs = self.inner.programs_for(device)
+        if not progs:
+            return progs
+        shared = self._shared.get(device)
+        if shared is None:
+            shared = tuple(self._mutate(device, progs[0].phases))
+            self._shared[device] = shared
+        return [dataclasses.replace(p, phases=shared) for p in progs]
+
+    def traces_for(self, device):
+        return self.inner.traces_for(device)
+
+    def programs(self):
+        return self.inner.programs()
+
+    def traces(self):
+        return self.inner.traces()
+
+
+def _small_ring(n=4, workgroups=4):
+    cfg = SimConfig(n_egpus=n - 1, workgroups=workgroups)
+    return get_scenario("ring_allreduce")(
+        cfg, closed_loop=True, payload_bytes=1 << 12
+    )
+
+
+def _drop_emit(target_rank):
+    def mutate(device, phases):
+        if device != target_rank:
+            return phases
+        out = []
+        dropped = False
+        for ph in phases:
+            if ph.emits and not dropped:
+                out.append(dataclasses.replace(ph, emits=()))
+                dropped = True
+            else:
+                out.append(ph)
+        return out
+
+    return mutate
+
+
+def _swap_wait(target_rank, amap):
+    def mutate(device, phases):
+        if device != target_rank:
+            return phases
+        out = []
+        swapped = False
+        for ph in phases:
+            if ph.wait_addrs and not swapped:
+                # repoint at the rank's own flag column, which no peer
+                # ever writes (flags are indexed by the writer)
+                out.append(
+                    dataclasses.replace(
+                        ph,
+                        wait_addrs=(amap.flag_addr(device, slot=0),),
+                    )
+                )
+                swapped = True
+            else:
+                out.append(ph)
+        return out
+
+    return mutate
+
+
+def _duplicate_wait(target_rank):
+    """Benign: re-wait an already-satisfied sticky flag (no deadlock)."""
+
+    def mutate(device, phases):
+        if device != target_rank:
+            return phases
+        out = []
+        duplicated = False
+        for ph in phases:
+            out.append(ph)
+            if ph.wait_addrs and not duplicated:
+                out.append(ph)
+                duplicated = True
+        return out
+
+    return mutate
+
+
+# ---------------------------------------------------------------------------
+# the clean path: every builtin x every preset
+# ---------------------------------------------------------------------------
+
+
+def test_all_builtin_scenarios_verify_clean_on_all_presets():
+    for name in list_scenarios():
+        for fabric in [None, *list_fabrics()]:
+            params = {"closed_loop": True}
+            if fabric is not None:
+                params["fabric"] = fabric
+            try:
+                verdict = verify_scenario(
+                    name, devices=8, devices_per_node=2, **params
+                )
+            except TypeError:
+                if fabric is not None:
+                    continue  # open-loop-only scenario, presets n/a
+                verdict = verify_scenario(name, devices=8)
+            assert verdict.ok, verdict.render()
+            assert not verdict.deadlock
+
+
+def test_verify_scenario_accepts_instance_and_rejects_cfg_mismatch():
+    sc = _small_ring()
+    assert verify_scenario(sc).ok
+    with pytest.raises(ValueError, match="different SimConfig"):
+        verify_scenario(sc, SimConfig(n_egpus=7))
+
+
+# ---------------------------------------------------------------------------
+# seeded mutation classes, detected without simulation
+# ---------------------------------------------------------------------------
+
+
+def test_detects_wait_for_cycle_with_blame_chain():
+    def phases(sc, device):
+        n = sc.cfg.n_devices
+        return [
+            PhaseSpec("compute", duration_cycles=50),
+            PhaseSpec(
+                "wait_flags",
+                wait_addrs=(sc.amap.flag_addr((device + 1) % n),),
+            ),
+            PhaseSpec(
+                "drain", duration_cycles=5,
+                emits=(EmitOp((device - 1) % n),),
+            ),
+        ]
+
+    sc = _ProgramScenario(SimConfig(n_egpus=2, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    assert not verdict.ok and verdict.deadlock
+    [finding] = [f for f in verdict.errors if f.kind == "deadlock-cycle"]
+    # the blame chain names every rank and the flag each one is stuck on
+    for rank in range(3):
+        assert f"rank {rank}" in finding.message
+    assert "waits on flag" in finding.message
+
+
+def test_detects_unmatched_wait_from_dropped_emit():
+    sc = _MutatedScenario(_small_ring(), _drop_emit(1))
+    verdict = verify_scenario(sc)
+    assert not verdict.ok and verdict.deadlock
+    kinds = {f.kind for f in verdict.errors}
+    assert "unmatched-wait" in kinds or "deadlock-cycle" in kinds
+
+
+def test_detects_unmatched_wait_from_swapped_target():
+    inner = _small_ring()
+    sc = _MutatedScenario(inner, _swap_wait(2, inner.amap))
+    verdict = verify_scenario(sc)
+    assert not verdict.ok and verdict.deadlock
+    assert any(f.kind == "unmatched-wait" for f in verdict.errors)
+
+
+def test_detects_unawaited_emit_as_warning():
+    def phases(sc, device):
+        out = [PhaseSpec("compute", duration_cycles=10)]
+        if device == 0:
+            # rank 0 notifies rank 1, which never waits
+            out.append(
+                PhaseSpec("drain", duration_cycles=5, emits=(EmitOp(1),))
+            )
+        return out
+
+    sc = _ProgramScenario(SimConfig(n_egpus=1, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    assert verdict.ok  # warning, not error: the run still terminates
+    assert any(f.kind == "unawaited-emit" for f in verdict.warnings)
+    assert not verdict.deadlock
+
+
+def test_detects_flag_slot_write_race():
+    def phases(sc, device):
+        shared_addr = sc.amap.flag_addr(1, slot=0)
+        if device == 0:
+            return [
+                PhaseSpec("wait_flags", wait_addrs=(shared_addr,)),
+                PhaseSpec("drain", duration_cycles=5),
+            ]
+        # ranks 1 and 2 both write the same flag address in rank 0's
+        # memory, with no ordering between them
+        return [
+            PhaseSpec("compute", duration_cycles=10 * device),
+            PhaseSpec(
+                "drain", duration_cycles=5,
+                emits=(EmitOp(0, addr=shared_addr),),
+            ),
+        ]
+
+    sc = _ProgramScenario(SimConfig(n_egpus=2, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    races = [f for f in verdict.errors if f.kind == "slot-race"]
+    assert races, verdict.render()
+    assert "unordered writers" in races[0].message
+    assert not verdict.deadlock  # a race is not a hang
+
+
+def test_no_race_when_wait_orders_the_writers():
+    def phases(sc, device):
+        shared_addr = sc.amap.flag_addr(1, slot=0)
+        if device == 0:
+            return [PhaseSpec("wait_flags", wait_addrs=(shared_addr,))]
+        if device == 1:
+            return [
+                PhaseSpec(
+                    "drain", duration_cycles=5,
+                    emits=(EmitOp(0, addr=shared_addr), EmitOp(2)),
+                ),
+            ]
+        # rank 2 waits for rank 1's handoff before re-writing the flag:
+        # a happens-before path orders the two writers
+        return [
+            PhaseSpec("wait_flags", wait_addrs=(sc.amap.flag_addr(1),)),
+            PhaseSpec(
+                "drain", duration_cycles=5,
+                emits=(EmitOp(0, addr=shared_addr),),
+            ),
+        ]
+
+    sc = _ProgramScenario(SimConfig(n_egpus=2, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    assert not any(f.kind == "slot-race" for f in verdict.findings), (
+        verdict.render()
+    )
+
+
+def test_detects_unreachable_pair_self_emit():
+    def phases(sc, device):
+        return [
+            PhaseSpec("compute", duration_cycles=10),
+            PhaseSpec("drain", duration_cycles=5, emits=(EmitOp(device),)),
+        ]
+
+    sc = _ProgramScenario(SimConfig(n_egpus=1, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    pairs = [f for f in verdict.errors if f.kind == "unreachable-pair"]
+    assert pairs and "emits to itself" in pairs[0].message
+
+
+def test_detects_invalid_emit_slot():
+    def phases(sc, device):
+        return [
+            PhaseSpec(
+                "drain", duration_cycles=5,
+                emits=(EmitOp((device + 1) % 2, slot=99),),
+            ),
+        ]
+
+    sc = _ProgramScenario(SimConfig(n_egpus=1, workgroups=2), phases)
+    verdict = verify_scenario(sc)
+    assert any(f.kind == "invalid-emit" for f in verdict.errors)
+
+
+# ---------------------------------------------------------------------------
+# static verdict <=> runtime EidolaDeadlock
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mutator,expect_deadlock",
+    [
+        (None, False),
+        (_drop_emit(1), True),
+        (_drop_emit(3), True),
+        (_duplicate_wait(2), False),
+    ],
+    ids=["identity", "drop-emit-r1", "drop-emit-r3", "dup-wait"],
+)
+def test_static_verdict_matches_runtime(mutator, expect_deadlock):
+    inner = _small_ring()
+    sc = _MutatedScenario(inner, mutator) if mutator else inner
+    verdict = verify_scenario(sc)
+    assert verdict.deadlock == expect_deadlock, verdict.render()
+    if expect_deadlock:
+        with pytest.raises(EidolaDeadlock):
+            simulate(sc, collect_segments=False)
+    else:
+        report = simulate(sc, collect_segments=False)
+        assert report.sim_cycles > 0
+
+
+def test_swapped_wait_matches_runtime_and_embeds_diagnosis():
+    inner = _small_ring()
+    sc = _MutatedScenario(inner, _swap_wait(2, inner.amap))
+    assert verify_scenario(sc).deadlock
+    with pytest.raises(EidolaDeadlock) as exc:
+        simulate(sc, collect_segments=False)
+    # the engine embeds the analyzer's blame diagnosis into the error
+    assert exc.value.diagnosis is not None
+    assert "static analysis" in str(exc.value)
+
+
+def test_property_random_mutations_match_runtime():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        kind=st.sampled_from(["identity", "drop", "swap", "dup"]),
+        rank=st.integers(min_value=0, max_value=3),
+        n=st.sampled_from([3, 4]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def run(kind, rank, n):
+        rank %= n
+        inner = _small_ring(n=n, workgroups=2)
+        if kind == "identity":
+            sc = inner
+        elif kind == "drop":
+            sc = _MutatedScenario(inner, _drop_emit(rank))
+        elif kind == "swap":
+            sc = _MutatedScenario(inner, _swap_wait(rank, inner.amap))
+        else:
+            sc = _MutatedScenario(inner, _duplicate_wait(rank))
+        flagged = verify_scenario(sc).deadlock
+        try:
+            simulate(sc, collect_segments=False)
+            hung = False
+        except EidolaDeadlock:
+            hung = True
+        assert flagged == hung
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# program-graph lowering details
+# ---------------------------------------------------------------------------
+
+
+def test_program_graph_lanes_and_sites():
+    sc = _small_ring(n=4, workgroups=4)
+    g = ProgramGraph.from_scenario(sc)
+    assert g.n_devices == 4 and g.closed_loop
+    assert sorted(g.lanes_of) == [0, 1, 2, 3]
+    # all builtins share one phases tuple per rank -> one lane per device
+    assert all(len(lanes) == 1 for lanes in g.lanes_of.values())
+    assert all(g.lanes[ls[0]].wg_count == 4 for ls in g.lanes_of.values())
+    # every wait has a matching emitter (the clean ring)
+    assert set(g.waiters) <= set(g.emitters)
+    assert g.emit_pairs() == [(d, (d + 1) % 4) for d in range(4)]
+
+
+def test_open_loop_scenario_lowers_external_flags():
+    sc = get_scenario("gemv_allreduce")(SimConfig(n_egpus=3))
+    g = ProgramGraph.from_scenario(sc)
+    assert not g.closed_loop
+    # eidolon trace writes satisfy the waits; nothing is unmatched
+    assert g.external_flags
+    verdict = verify_scenario(sc)
+    assert verdict.ok and not verdict.deadlock
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_sanitized_runs_bit_identical_to_bench_baseline():
+    with open(os.path.join(REPO, "BENCH_multi_device.json")) as f:
+        rows = json.load(f)["rows"]
+    cfg = SimConfig(workgroups=64, engine=EngineKind.EVENT)
+    checked = 0
+    for row in rows:
+        if row["devices"] != 4 or row["engine"] != "event":
+            continue
+        r = simulate(
+            row["scenario"],
+            cfg,
+            devices=4,
+            closed_loop=True,
+            devices_per_node=row["devices_per_node"],
+            fabric=row["fabric"],
+            collect_segments=False,
+            sanitize=True,
+        )
+        assert r.meta["sanitized"] is True
+        got = {
+            "flag_reads": r.flag_reads,
+            "nonflag_reads": r.nonflag_reads,
+            "xgmi_writes_in": r.traffic.get("xgmi_writes_in", 0),
+            "wtt_enacted": r.wtt_enacted,
+            "sim_cycles": r.sim_cycles,
+            "kernel_span_ns": r.kernel_span_ns,
+        }
+        for k, v in got.items():
+            assert v == row[k], (
+                f"{row['scenario']} dpn={row['devices_per_node']} "
+                f"fabric={row['fabric']}: sanitized run drifted {k}: "
+                f"{row[k]} -> {v}"
+            )
+        checked += 1
+    assert checked >= 8  # 4 scenarios x (flat, tiered, 2 presets) at 4 dev
+
+
+def test_sanitizer_catches_byte_conservation_violation():
+    sc = _small_ring()
+    cluster = Cluster(sc.cfg, sc, sanitize=True, collect_segments=False)
+    # tamper with the fabric's accounting before the run: the independent
+    # leg re-walk must notice the books don't balance
+    cluster.fabric.stats["bytes"] += 1
+    with pytest.raises(SanitizerError, match="byte conservation"):
+        cluster.run()
+
+
+def test_sanitizer_catches_lost_flag_delivery():
+    sc = _small_ring()
+    cluster = Cluster(sc.cfg, sc, sanitize=True, collect_segments=False)
+    key = (1, sc.amap.flag_addr(0, slot=0))
+    cluster._san.expected_flags[key] = (
+        cluster._san.expected_flags.get(key, 0) + 1
+    )
+    with pytest.raises(SanitizerError, match="flag delivery"):
+        cluster.run()
+
+
+def test_sanitizer_unit_checks():
+    fm = FabricModel(4)
+    amap = AddressMap(n_devices=4)
+    san = TrafficSanitizer(amap, fm, 4)
+    # acausal arrival
+    san.note_emission(0, 1, amap.flag_addr(0), 8, 100.0, 50.0)
+    obs = san.observer_for(1)
+    obs(amap.flag_addr(0), 1, 8, 10)
+    obs(amap.flag_addr(0), 1, 8, 5)  # calendar runs backwards
+    with pytest.raises(SanitizerError) as exc:
+        san.check()
+    msg = str(exc.value)
+    assert "acausal" in msg and "calendar ran backwards" in msg
+    # the doubly-enacted flag (1 expected, 2 enacted) is also flagged
+    assert "flag delivery" in msg
+
+
+def test_sanitize_requires_closed_loop():
+    with pytest.raises(ValueError, match="closed-loop"):
+        simulate("gemv_allreduce", sanitize=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite: AddressMap flag-slot claims
+# ---------------------------------------------------------------------------
+
+
+def test_claim_flag_slots_rejects_collision():
+    amap = AddressMap(n_devices=4, flag_slots=4)
+    amap.claim_flag_slots("stage_a", [(d, 0) for d in range(4)])
+    amap.claim_flag_slots("stage_a", [(0, 0)])  # same label: idempotent
+    with pytest.raises(ValueError, match="flag slot collision"):
+        amap.claim_flag_slots("stage_b", [(2, 0)])
+
+
+def test_claim_flag_slots_validates_ranges():
+    amap = AddressMap(n_devices=4, flag_slots=2)
+    with pytest.raises(ValueError, match="slot 2 out of range"):
+        amap.claim_flag_slots("x", [(0, 2)])
+    with pytest.raises(ValueError, match="device 4 out of range"):
+        amap.claim_flag_slots("x", [(4, 0)])
+
+
+def test_scenario_construction_claims_disjoint_ranges():
+    # sharing one AddressMap between two scenarios whose stages overlap
+    # must fail loudly at construction time
+    cfg = SimConfig(n_egpus=3)
+    ring = get_scenario("ring_allreduce")
+    amap = ring.default_amap(cfg)
+    ring(cfg, amap, closed_loop=True)
+    with pytest.raises(ValueError, match="flag slot collision"):
+        get_scenario("all_to_all")(cfg, amap, closed_loop=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite: deterministic fabric stats ordering
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_stats_and_port_stats_are_deterministically_ordered():
+    sc = _small_ring()
+    fm = resolve_cluster_fabric(sc.cfg, sc, fabric="fat_tree")
+    # per-class stat keys come out sorted (after the three totals)
+    keys = list(fm.stats)
+    assert keys[:3] == ["messages", "bytes", "queued_ns"]
+    classes = sorted(fm.spec.link_classes)
+    assert keys[3:] == [
+        c + suffix
+        for c in classes
+        for suffix in ("_messages", "_bytes", "_queued_ns")
+    ]
+    # every declared port pre-seeded at zero, sorted by repr
+    assert list(fm.port_stats) == sorted(fm.spec.ports, key=repr)
+    assert all(v == [0, 0, 0.0] for v in fm.port_stats.values())
+    fm.transfer(0, 1, 64, 0.0)
+    fm.reset()
+    assert list(fm.port_stats) == sorted(fm.spec.ports, key=repr)
+    assert all(v == [0, 0, 0.0] for v in fm.port_stats.values())

@@ -130,3 +130,93 @@ def test_scenario_cli_sweep_csv(tmp_path):
     assert out.splitlines()[0].startswith("scenario,engine")
     with open(csv_path) as f:
         assert len(f.read().strip().splitlines()) == 3  # header + 2 rows
+
+
+def test_scenario_cli_verify_ok():
+    out = _run([
+        "repro.launch.scenario", "--scenario", "ring_allreduce",
+        "--devices", "8", "--verify",
+    ])
+    assert "verify 'ring_allreduce'" in out
+    assert ": ok" in out
+
+
+def test_scenario_cli_verify_rejects_broken_program():
+    """--verify exits non-zero and prints the analyzer diagnosis, without
+    ever starting a simulation."""
+    import io
+    from contextlib import redirect_stdout
+
+    from repro.core.events import TraceBundle
+    from repro.core.scenario import (
+        EmitOp,
+        PhaseSpec,
+        Scenario,
+        WGProgram,
+        _REGISTRY,
+        register_scenario,
+    )
+    from repro.launch.scenario import main
+
+    @register_scenario
+    class _BrokenRing(Scenario):
+        name = "broken_ring_cli_test"
+        closed_loop = True
+
+        def __init__(self, cfg, amap=None, *, closed_loop=True):
+            super().__init__(cfg, amap)
+            self.closed_loop = True
+
+        def programs_for(self, device):
+            n = self.cfg.n_devices
+            shared = (
+                PhaseSpec(
+                    "wait_flags",
+                    wait_addrs=(self.amap.flag_addr((device + 1) % n),),
+                ),
+                PhaseSpec("drain", duration_cycles=5,
+                          emits=(EmitOp((device - 1) % n),)),
+            )
+            return [
+                WGProgram(wg=w, cu=w, dispatch_cycle=0, phases=shared)
+                for w in range(self.cfg.workgroups)
+            ]
+
+        def programs(self):
+            return self.programs_for(0)
+
+        def traces(self):
+            return TraceBundle()
+
+    try:
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            rc = main([
+                "--scenario", "broken_ring_cli_test", "--devices", "4",
+                "--verify",
+            ])
+        out = buf.getvalue()
+        assert rc == 1
+        assert "deadlock-cycle" in out
+        assert "waits on flag" in out
+    finally:
+        _REGISTRY.pop("broken_ring_cli_test", None)
+
+
+def test_scenario_cli_sanitize():
+    out = _run([
+        "repro.launch.scenario", "--scenario", "ring_allreduce",
+        "--devices", "4", "--detailed", "all", "--sanitize",
+        "-p", "workgroups=12",
+    ])
+    assert "4dev closed" in out
+    # --sanitize without a closed-loop run is a usage error
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.launch.scenario", "--scenario",
+         "gemv_allreduce", "--sanitize"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560,
+    )
+    assert bad.returncode != 0
+    assert "--detailed all" in bad.stderr

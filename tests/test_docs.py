@@ -44,3 +44,13 @@ def test_architecture_md_fabric_gallery_example_executes():
     # the gallery's asserts (rail faster than the shared uplink on the
     # incast, per-class stats, rails knob) run as written
     exec(compile(rail[0], "ARCHITECTURE.md:rail_optimized", "exec"), {})
+
+
+def test_architecture_md_verify_example_executes():
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    verify = [b for b in blocks if "verify_scenario" in b]
+    assert len(verify) == 1, "expected exactly one verify code block"
+    # the example's asserts (static deadlock verdict, runtime agreement,
+    # embedded diagnosis) run as written
+    exec(compile(verify[0], "ARCHITECTURE.md:verify_scenario", "exec"), {})
