@@ -3,7 +3,8 @@
 Sweeps scenarios x fabric shapes on the event engine for every
 closed-loop-capable scenario: each device count runs in the flat single-tier
 shape, a tiered intra/inter-node shape (``devices_per_node`` = 2 below 16
-devices, 4 from 16 up), AND — same node split — on the ``fat_tree`` and
+devices, 4 from 16 up, 16 at pod scale), AND — same node split — on the
+``fat_tree`` and
 ``rail_optimized`` interconnect presets, recording simulated span, aggregate
 traffic, and wall time, so future performance PRs have a multi-device
 baseline to compare against (`BENCH_multi_device.json`).  A cross-engine
@@ -21,10 +22,21 @@ the event calendar, or the fabric router.  The guard also requires at least
 one matched ``fat_tree`` and one matched ``rail_optimized`` row, so the
 graph-based presets can never silently fall out of coverage.
 
+Pod scale (1024+ devices) rides the timeline engine
+(``repro.core.cohort_timeline``, auto-selected; rows still record
+``engine="event"`` — same semantics — with ``engine_impl`` naming the
+implementation).  A skip policy keeps the sweep seconds-per-row: the flat
+single-tier shape is skipped at >= 1024 devices and the O(devices^2)-phase
+collectives (ring_allreduce, all_to_all) at >= 1024, each with a printed
+reason, never silently.  Rows carry a ``wall_breakdown`` section-timing dict
+(interpreter/fabric/WTT seconds) when the timeline engine ran; like
+``wall_time_s`` it is measurement metadata, not simulation physics, so
+``--check`` ignores it.
+
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
-     [--quick] [--devices 4,8,...] [--repeats N]
+     [--quick] [--devices 4,8,...] [--scenarios a,b] [--repeats N]
      [--check BENCH_multi_device.json] [--wall-factor 2.0]
-     [--out BENCH_multi_device.json]
+     [--max-row-wall SECONDS] [--out BENCH_multi_device.json]
 """
 
 from __future__ import annotations
@@ -60,8 +72,40 @@ COUNTER_KEYS = (
 def tiered_dpn(devices: int) -> int:
     """The benchmark's tiered shape for one device count: 2-device nodes
     below 16 devices (so 4- and 8-device CI rows still split), 4-device
-    nodes from 16 up."""
-    return 2 if devices < 16 else 4
+    nodes from 16 up, 16-device nodes from 4096 up.  The pod-scale bump is
+    physical, not cosmetic: real 4096-accelerator machines ship larger
+    scale-up domains, and the hierarchical leader ring is O(devices/dpn)
+    steps per leader — 4-device nodes at 4096 devices would mean a
+    1024-leader global ring, minutes of wall on any engine."""
+    if devices < 16:
+        return 2
+    return 4 if devices < 4096 else 16
+
+
+def pod_skip_reason(name: str, devices: int, dpn) -> str | None:
+    """Why a (scenario, devices, shape) combination is excluded from the
+    sweep, or None to run it.  Pod-scale coverage is deliberate, not silent:
+    every exclusion prints its reason.
+
+    * flat single-tier at >= 1024 devices: the flat shape exists to contrast
+      tier routing, which pod-scale rows are not about; for
+      hierarchical_allreduce it additionally degenerates to an
+      O(devices)-step intra ring per device (hours of wall);
+    * ring_allreduce / all_to_all at >= 1024: their programs are
+      O(devices) phases x O(devices) ranks (global ring steps, full
+      dispatch incast) — O(devices^2) work that no engine makes
+      seconds-scale (measured: 512 s / 286 s at 1024 devices even on the
+      timeline engine); the 256-device tiered rows pin their scaling.
+    """
+    if devices >= 1024 and dpn is None:
+        return "flat single-tier shape skipped at pod scale"
+    if devices >= 1024 and name in ("ring_allreduce", "all_to_all"):
+        return (
+            f"{name} skipped at {devices} devices: O(devices^2) program "
+            "phases (global ring / full incast) take minutes on any "
+            "engine; 256-device tiered rows pin its scaling"
+        )
+    return None
 
 
 def _row_key(row: dict) -> tuple:
@@ -142,9 +186,16 @@ def main() -> None:
                          "with a partial sweep)")
     ap.add_argument("--devices", default=None,
                     help="comma-separated device counts "
-                         "(default 4,8,16,32,64,128,256)")
+                         "(default 4,8,16,32,64,128,256,1024,4096)")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario filter "
+                         "(default: all closed-loop scenarios)")
     ap.add_argument("--repeats", type=int, default=1,
                     help="wall time = min over N runs (counters must agree)")
+    ap.add_argument("--max-row-wall", type=float, default=None,
+                    metavar="SECONDS",
+                    help="fail if any row's wall time exceeds this budget "
+                         "(the CI pod-smoke gate)")
     ap.add_argument("--check", default=None, metavar="BASELINE",
                     help="regression guard: compare counters (exact) and "
                          "wall time against this baseline JSON")
@@ -161,7 +212,17 @@ def main() -> None:
     if args.devices:
         device_counts = [int(x) for x in args.devices.split(",")]
     else:
-        device_counts = [2, 4] if args.quick else [4, 8, 16, 32, 64, 128, 256]
+        device_counts = (
+            [2, 4] if args.quick
+            else [4, 8, 16, 32, 64, 128, 256, 1024, 4096]
+        )
+    if args.scenarios:
+        scenarios = tuple(args.scenarios.split(","))
+        unknown = set(scenarios) - set(CLOSED_LOOP_SCENARIOS)
+        if unknown:
+            ap.error(f"unknown scenarios: {sorted(unknown)}")
+    else:
+        scenarios = CLOSED_LOOP_SCENARIOS
     base = SimConfig(
         workgroups=16 if args.quick else 64,
         engine=EngineKind.EVENT,
@@ -179,9 +240,14 @@ def main() -> None:
     print(f"{'scenario':22s} {'devices':>7s} {'dpn':>4s} {'fabric':>15s} "
           f"{'span_ns':>12s} {'flag_reads':>11s} {'wtt_enacted':>11s} "
           f"{'wall_ms':>9s}")
-    for name in CLOSED_LOOP_SCENARIOS:
+    for name in scenarios:
         for nd in device_counts:
             for dpn, fab in shapes_for(nd):
+                skip = pod_skip_reason(name, nd, dpn)
+                if skip is not None:
+                    print(f"[bench] skip {name} devices={nd} "
+                          f"dpn={dpn or '-'} fabric={fab or '-'}: {skip}")
+                    continue
                 best = None
                 for _ in range(max(1, args.repeats)):
                     r = simulate(name, base, devices=nd, closed_loop=True,
@@ -202,6 +268,10 @@ def main() -> None:
                         "kernel_span_ns": r.kernel_span_ns,
                         "sim_cycles": r.sim_cycles,
                         "wall_time_s": r.wall_time_s,
+                        # implementation metadata, not simulation physics:
+                        # --check ignores both (it compares COUNTER_KEYS)
+                        "engine_impl": r.meta.get("engine_impl"),
+                        "wall_breakdown": r.meta.get("wall_breakdown"),
                     }
                     if best is not None:
                         for k in COUNTER_KEYS:
@@ -230,7 +300,7 @@ def main() -> None:
               f"{nd} > 32; cycle engine impractical)")
         spot_scenarios = ()
     else:
-        spot_scenarios = CLOSED_LOOP_SCENARIOS
+        spot_scenarios = scenarios
     for name in spot_scenarios:
         for dpn, fab in shapes_for(nd):
             pair = {}
@@ -249,14 +319,30 @@ def main() -> None:
           f"({len(rows)} rows)")
 
     failures = []
+    if args.max_row_wall is not None:
+        for row in rows:
+            if row["wall_time_s"] > args.max_row_wall:
+                failures.append(
+                    f"{row['scenario']} devices={row['devices']} "
+                    f"dpn={row.get('devices_per_node')} "
+                    f"fabric={row.get('fabric')}: wall "
+                    f"{row['wall_time_s']:.1f} s exceeds the "
+                    f"--max-row-wall budget ({args.max_row_wall:g} s)"
+                )
+        for f_ in failures:
+            print(f"[bench] BUDGET {f_}")
+        print(f"[bench] row wall budget "
+              f"{'PASS' if not failures else 'FAIL'} "
+              f"({args.max_row_wall:g} s)")
     if args.check:
-        failures = check_against_baseline(
+        check_failures = check_against_baseline(
             rows, args.check, args.wall_factor, args.wall_grace
         )
-        for f_ in failures:
+        for f_ in check_failures:
             print(f"[bench] REGRESSION {f_}")
         print(f"[bench] baseline check "
-              f"{'PASS' if not failures else 'FAIL'} vs {args.check}")
+              f"{'PASS' if not check_failures else 'FAIL'} vs {args.check}")
+        failures += check_failures
 
     out = args.out
     if out is None:

@@ -4,6 +4,15 @@ The CI gate: ``python -m repro.analysis`` statically checks all built-in
 (and any registered) scenarios on the flat fabric and on each interconnect
 preset, without running a single simulated cycle.  Exits non-zero if any
 combination produces an error-severity finding.
+
+It then dynamically verifies the pod-scale **timeline engine path**
+(``repro.core.cohort_timeline``): every closed-loop scenario x preset runs
+once at small scale through both the event engine and the timeline engine,
+and their traffic counters must match bit-for-bit.  A scenario may be
+timeline-ineligible only by *declaring why* (a ``timeline_opt_out`` reason
+string on the scenario class); an undeclared ineligibility is a failure —
+pod-scale coverage must never rot silently.  ``--no-timeline`` skips this
+stage (static-only runs).
 """
 
 from __future__ import annotations
@@ -17,6 +26,79 @@ from repro.core.scenario import list_scenarios
 
 from .verify import verify_scenario
 
+# the physics outputs the timeline engine must reproduce bit-for-bit
+_TIMELINE_KEYS = (
+    "flag_reads",
+    "nonflag_reads",
+    "local_writes",
+    "xgmi_writes_in",
+    "xgmi_writes_out",
+    "xgmi_bytes_in",
+    "xgmi_bytes_out",
+    "read_bytes",
+    "write_bytes",
+)
+
+
+def _verify_timeline_path(devices: int, dpn: int, quiet: bool) -> int:
+    """Run every closed-loop scenario x fabric preset through both engine
+    implementations and compare counters.  Returns the failure count."""
+    from repro.core import simulate
+    from repro.core.scenario import get_scenario
+
+    failures = 0
+    combos = 0
+    for name in list_scenarios():
+        for fabric in [None, *list_fabrics()]:
+            kw = dict(
+                devices=devices, closed_loop=True, collect_segments=False
+            )
+            if fabric is not None:
+                kw.update(fabric=fabric, devices_per_node=dpn)
+            try:
+                a = simulate(name, timeline=False, **kw)
+            except TypeError:
+                break  # open-loop-only scenario: no timeline path to verify
+            combos += 1
+            where = f"{name} [{fabric or 'flat'}]"
+            try:
+                b = simulate(name, timeline=True, **kw)
+            except ValueError as e:
+                declared = getattr(
+                    get_scenario(name), "timeline_opt_out", None
+                )
+                if declared:
+                    if not quiet:
+                        print(f"{where}: timeline opt-out declared: "
+                              f"{declared}")
+                    continue
+                failures += 1
+                print(f"{where}: FAIL timeline-ineligible without a "
+                      f"declared timeline_opt_out: {e}")
+                continue
+            if b.meta.get("engine_impl") != "timeline":
+                failures += 1
+                print(f"{where}: FAIL timeline engine did not engage "
+                      f"(engine_impl={b.meta.get('engine_impl')!r})")
+                continue
+            drift = [
+                f"{k} {a.traffic.get(k)} != {b.traffic.get(k)}"
+                for k in _TIMELINE_KEYS
+                if a.traffic.get(k) != b.traffic.get(k)
+            ]
+            if a.sim_cycles != b.sim_cycles:
+                drift.append(f"sim_cycles {a.sim_cycles} != {b.sim_cycles}")
+            if drift:
+                failures += 1
+                print(f"{where}: FAIL timeline counters drifted: "
+                      + "; ".join(drift))
+            elif not quiet:
+                print(f"{where}: timeline path ok")
+    tag = "FAILED" if failures else "ok"
+    print(f"verified {combos} timeline-path combinations: {tag}"
+          + (f" ({failures} with errors)" if failures else ""))
+    return failures
+
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
@@ -28,6 +110,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument(
         "-q", "--quiet", action="store_true",
         help="print only failing combinations",
+    )
+    ap.add_argument(
+        "--no-timeline", action="store_true",
+        help="skip the dynamic timeline-engine verification stage",
     )
     args = ap.parse_args(argv)
 
@@ -59,6 +145,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     tag = "FAILED" if failures else "ok"
     print(f"verified {combos} scenario x fabric combinations: {tag}"
           + (f" ({failures} with errors)" if failures else ""))
+    if not args.no_timeline:
+        failures += _verify_timeline_path(
+            args.devices, args.devices_per_node, args.quiet
+        )
     return 1 if failures else 0
 
 

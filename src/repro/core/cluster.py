@@ -26,7 +26,6 @@ cycle/event runs stay bit-identical, which the tests assert per scenario.
 
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Union
 
@@ -39,7 +38,7 @@ from .monitor import MonitorLog
 from .scenario import EmitOp, PhaseSpec, Scenario
 from .target import TargetDevice
 from .topology import V5E, FabricModel, Topology
-from .wtt import WriteTrackingTable
+from .wtt import LazyWriteRun, RegistrationLike, WriteTrackingTable
 
 __all__ = ["Cluster", "ClusterNode", "resolve_cluster_fabric"]
 
@@ -153,12 +152,17 @@ class Cluster:
         topology: Optional[Topology] = None,
         cohorts: bool = True,
         sanitize: bool = False,
+        timeline: Optional[bool] = None,
     ):
         self.cfg = cfg.validate()
         self.scenario = scenario
         self.amap = scenario.amap
         self.perturb = perturb
         self.collect_segments = collect_segments
+        # None = auto (use the timeline engine when eligible), True = require
+        # it (error when ineligible), False = never
+        self._timeline = timeline
+        self._cohorts_flag = cohorts
         self.fabric = resolve_cluster_fabric(
             self.cfg, scenario, fabric=fabric, topology=topology
         )
@@ -171,7 +175,7 @@ class Cluster:
             )
         else:
             self._san = None
-        self._seq = itertools.count()
+        self._seq = 0  # cluster-wide emission seq counter (plain int: hot path)
         # (src_device, phase_idx, emit_idx) -> completions seen (coalescing)
         self._emit_counts: Dict[tuple, int] = {}
         # dst device -> marker data writes placed so far (address spacing)
@@ -332,7 +336,7 @@ class Cluster:
         # per-op path) and grouped per destination WTT; within one table the
         # batch preserves that order, so reg_nos — the pop tie-break — are
         # assigned exactly as sequential registration would have
-        per_dst: Dict[int, List[RegisteredWrite]] = {}
+        per_dst: Dict[int, List[RegistrationLike]] = {}
         for op, arrival_ns in zip(ops, arrivals):
             ws = self._emit_writes(src, op, arrival_ns, cycle)
             bucket = per_dst.get(op.dst)
@@ -345,11 +349,19 @@ class Cluster:
 
     def _emit_writes(
         self, src: int, op: EmitOp, arrival_ns: float, cycle: int
-    ) -> List[RegisteredWrite]:
+    ) -> List[RegistrationLike]:
         """The registered writes (markers + flag) of one routed emission,
         enforcing causality: a write emitted at ``cycle`` can never become
         visible in the same cycle (jitter perturbations could otherwise pull
         it into the past, which the two engines would order differently).
+
+        Without a perturbation on the destination, the marker burst is
+        returned as one :class:`LazyWriteRun` descriptor instead of
+        ``data_writes`` materialized dataclasses — the WTT synthesizes the
+        members at enactment with the identical wakeup expression and a
+        contiguous seq/reg_no block, so pop order and counters are
+        bit-identical (the incast registration cost drops from O(devices^2)
+        dataclasses per run to O(devices) descriptors).
         """
         cfg = self.cfg
         arrival_ns += cfg.xgmi_enact_latency_ns
@@ -359,7 +371,7 @@ class Cluster:
         p = self._perturb_for(op.dst)
         min_ns = cfg.cycles_to_ns(cycle + 1)
         seq = self._seq
-        out: List[RegisteredWrite] = []
+        out: List[RegistrationLike] = []
         if cfg.include_data_writes and op.data_writes > 0:
             lead = min(cfg.data_write_lead_ns, arrival_ns)
             t0 = arrival_ns - lead
@@ -367,33 +379,52 @@ class Cluster:
             self._data_marks[op.dst] = base + op.data_writes
             mark_data = 0xC0 + (src % 16)
             mark_base = self.amap.partial_base + base * 64
-            for k in range(op.data_writes):
-                w = RegisteredWrite(
-                    wakeup_ns=t0 + lead * (k + 1) / (op.data_writes + 1),
-                    addr=mark_base + k * 64,
-                    data=mark_data,
-                    size=8,
-                    src=src,
-                    seq=next(seq),
+            if p is None:
+                out.append(
+                    LazyWriteRun(
+                        count=op.data_writes,
+                        base_ns=t0,
+                        span_ns=lead,
+                        addr_base=mark_base,
+                        addr_stride=64,
+                        data=mark_data,
+                        size=8,
+                        src=src,
+                        seq0=seq,
+                        min_ns=min_ns,
+                    )
                 )
-                if p is not None:
+                seq += op.data_writes
+            else:
+                for k in range(op.data_writes):
+                    w = RegisteredWrite(
+                        wakeup_ns=t0 + lead * (k + 1) / (op.data_writes + 1),
+                        addr=mark_base + k * 64,
+                        data=mark_data,
+                        size=8,
+                        src=src,
+                        seq=seq,
+                    )
+                    seq += 1
                     w = p.jitter_write(w)
-                if w.wakeup_ns < min_ns:
-                    w = replace(w, wakeup_ns=min_ns)
-                out.append(w)
+                    if w.wakeup_ns < min_ns:
+                        w = replace(w, wakeup_ns=min_ns)
+                    out.append(w)
         w = RegisteredWrite(
             wakeup_ns=arrival_ns,
             addr=addr,
             data=op.data,
             size=op.size,
             src=src,
-            seq=next(seq),
+            seq=seq,
         )
+        seq += 1
         if p is not None:
             w = p.jitter_write(w)
         if w.wakeup_ns < min_ns:
             w = replace(w, wakeup_ns=min_ns)
         out.append(w)
+        self._seq = seq
         return out
 
     # ------------------------------------------------------------------
@@ -410,10 +441,41 @@ class Cluster:
                 "closed-loop cluster simulation requires EngineKind.CYCLE or "
                 "EngineKind.EVENT (the vectorized engine is replay-only)"
             )
-        engine = (
-            CyclePollEngine() if cfg.engine == EngineKind.CYCLE else EventQueueEngine()
-        )
-        res = engine.run_nodes([(n.target, n.wtt) for n in self.nodes])
+        # The timeline engine is a faster implementation of the event
+        # engine's semantics (bit-identical counters/segments), so it
+        # substitutes for EngineKind.EVENT when the lockstep-lane invariant
+        # holds; timeline=True makes ineligibility an error instead of a
+        # silent fallback.
+        use_timeline = False
+        tl_reason: Optional[str] = None
+        if cfg.engine == EngineKind.EVENT and self._timeline is not False:
+            if not self._cohorts_flag:
+                tl_reason = "cohorts=False forces the per-workgroup interpreter"
+            else:
+                from .cohort_timeline import timeline_support
+
+                tl_reason = timeline_support(self)
+            use_timeline = tl_reason is None
+        elif self._timeline is True:
+            tl_reason = "timeline engine requires EngineKind.EVENT"
+        if self._timeline is True and not use_timeline:
+            raise ValueError(
+                f"timeline engine requested but unavailable: {tl_reason}"
+            )
+        if use_timeline:
+            from .cohort_timeline import TimelineEngine
+
+            res = TimelineEngine(self).run()
+            engine_name = "event"  # same semantics & counters as the event
+            # engine; meta["engine_impl"] records the implementation
+        else:
+            engine = (
+                CyclePollEngine()
+                if cfg.engine == EngineKind.CYCLE
+                else EventQueueEngine()
+            )
+            res = engine.run_nodes([(n.target, n.wtt) for n in self.nodes])
+            engine_name = engine.name
         if self._san is not None:
             self._san.check()
 
@@ -436,7 +498,7 @@ class Cluster:
             if self.collect_segments:
                 segments.extend(node.target.collect_segments())
         return Report(
-            engine=engine.name,
+            engine=engine_name,
             sync=cfg.sync.value,
             traffic=traffic,
             flag_reads=traffic.get("flag_reads", 0),
@@ -453,6 +515,12 @@ class Cluster:
             meta={
                 "closed_loop": True,
                 "sanitized": self._san is not None,
+                "engine_impl": "timeline" if use_timeline else engine_name,
+                **(
+                    {"wall_breakdown": res.breakdown}
+                    if res.breakdown is not None
+                    else {}
+                ),
                 "device_spans_ns": spans,
                 "fabric": dict(self.fabric.stats),
                 "fabric_name": self.fabric.spec.name,

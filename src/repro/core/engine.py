@@ -26,7 +26,7 @@ from __future__ import annotations
 import heapq
 import time
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .target import EidolaDeadlock, TargetDevice
 from .wtt import WriteTrackingTable
@@ -43,6 +43,9 @@ class EngineResult:
     sim_cycles: int
     wall_time_s: float
     head_polls: int
+    # perf_counter section split (interpreter/fabric/WTT seconds); only the
+    # timeline engine fills this in — bench rows surface it as wall_breakdown
+    breakdown: Optional[Dict[str, float]] = None
 
 
 def _fmt_ids(ids: Sequence[int]) -> str:

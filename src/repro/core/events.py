@@ -28,6 +28,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 __all__ = [
     "RegisteredWrite",
+    "effective_writes",
     "TraceBundle",
     "Segment",
     "PHASES",
@@ -77,6 +78,35 @@ class RegisteredWrite:
 
     def sort_key(self) -> Tuple[float, int]:
         return (self.wakeup_ns, self.seq)
+
+
+def effective_writes(
+    writes: Sequence[RegisteredWrite],
+    *,
+    latency_ns: float = 0.0,
+    perturb=None,
+) -> List[RegisteredWrite]:
+    """Trace writes as the engine will see them: enact latency + jitter.
+
+    The shared no-perturb fast path: when ``perturb is None`` and
+    ``latency_ns == 0`` the input writes are already effective and are
+    returned as-is (one list copy, no dataclass churn) — previously both the
+    vectorized engine and the single-device builder materialized a full
+    :class:`RegisteredWrite` copy per trace write unconditionally.
+    """
+    if perturb is None and latency_ns == 0:
+        return list(writes)
+    out: List[RegisteredWrite] = []
+    for w in writes:
+        eff = (
+            dataclasses.replace(w, wakeup_ns=w.wakeup_ns + latency_ns)
+            if latency_ns
+            else w
+        )
+        if perturb is not None:
+            eff = perturb.jitter_write(eff)
+        out.append(eff)
+    return out
 
 
 # ---------------------------------------------------------------------------

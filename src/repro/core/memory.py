@@ -53,6 +53,46 @@ class AddressMap:
     partial_base: int = 0x3F_E000_000
     data_base: int = 0x100_000
 
+    def claim_flag_block(self, label: str, slot_lo: int, slot_hi: int) -> None:
+        """Claim slots ``[slot_lo, slot_hi)`` across *all* devices.
+
+        Equivalent to ``claim_flag_slots(label, ((d, s) for d in
+        range(n_devices) for s in range(slot_lo, slot_hi)))`` but recorded as
+        a slot interval, so pod-scale scenarios (devices × slots in the
+        millions) pay O(#claims) for the collision guarantee instead of
+        O(devices × slots).
+        """
+        if not (0 <= slot_lo <= slot_hi <= self.flag_slots):
+            raise ValueError(
+                f"flag-slot claim {label!r}: slot range [{slot_lo}, "
+                f"{slot_hi}) out of range (flag_slots={self.flag_slots})"
+            )
+        blocks = self.__dict__.get("_slot_blocks")
+        if blocks is None:
+            # the dataclass is frozen; the claim registry is bookkeeping, not
+            # layout state, so it lives outside the declared fields
+            blocks = []
+            object.__setattr__(self, "_slot_blocks", blocks)
+        for lo, hi, owner in blocks:
+            if owner != label and slot_lo < hi and lo < slot_hi:
+                raise ValueError(
+                    f"flag slot collision: slots [{max(slot_lo, lo)}, "
+                    f"{min(slot_hi, hi)}) already allocated to {owner!r}, "
+                    f"now claimed by {label!r} — give each synchronization "
+                    "stage its own slot range"
+                )
+        claims = self.__dict__.get("_slot_claims")
+        if claims:
+            for (device, slot), owner in claims.items():
+                if owner != label and slot_lo <= slot < slot_hi:
+                    raise ValueError(
+                        f"flag slot collision: (device={device}, "
+                        f"slot={slot}) already allocated to {owner!r}, now "
+                        f"claimed by {label!r} — give each synchronization "
+                        "stage its own slot range"
+                    )
+        blocks.append((slot_lo, slot_hi, label))
+
     def claim_flag_slots(self, label: str, pairs) -> None:
         """Register ``(device, slot)`` flag allocations under ``label``.
 
@@ -61,34 +101,53 @@ class AddressMap:
         ``(device, slot)`` — fails loudly at scenario-construction time with
         both owners named, instead of surfacing as confusing runtime behavior
         (a flag satisfied by the wrong stage).  Re-claiming a pair under the
-        same label is idempotent (builders may run per rank).
+        same label is idempotent (builders may run per rank).  Full-device ×
+        slot-interval claims should prefer :meth:`claim_flag_block`, which
+        records an interval instead of one entry per pair.
         """
         claims = self.__dict__.get("_slot_claims")
         if claims is None:
-            # the dataclass is frozen; the claim registry is bookkeeping, not
-            # layout state, so it lives outside the declared fields
             claims = {}
             object.__setattr__(self, "_slot_claims", claims)
-        for device, slot in pairs:
-            if not (0 <= device < self.n_devices):
+        new = dict.fromkeys(pairs, label)  # C-speed dedup of the pair stream
+        nd = self.n_devices
+        ns = self.flag_slots
+        for device, slot in new:
+            if not (0 <= device < nd):
                 raise ValueError(
                     f"flag-slot claim {label!r}: device {device} out of "
-                    f"range for {self.n_devices} devices"
+                    f"range for {nd} devices"
                 )
-            if not (0 <= slot < self.flag_slots):
+            if not (0 <= slot < ns):
                 raise ValueError(
                     f"flag-slot claim {label!r}: slot {slot} out of range "
-                    f"(flag_slots={self.flag_slots})"
+                    f"(flag_slots={ns})"
                 )
-            owner = claims.get((device, slot))
-            if owner is not None and owner != label:
-                raise ValueError(
-                    f"flag slot collision: (device={device}, slot={slot}) "
-                    f"already allocated to {owner!r}, now claimed by "
-                    f"{label!r} — give each synchronization stage its own "
-                    "slot range"
-                )
-            claims[(device, slot)] = label
+        blocks = self.__dict__.get("_slot_blocks")
+        if blocks:
+            for lo, hi, owner in blocks:
+                if owner == label:
+                    continue
+                for device, slot in new:
+                    if lo <= slot < hi:
+                        raise ValueError(
+                            f"flag slot collision: (device={device}, "
+                            f"slot={slot}) already allocated to {owner!r}, "
+                            f"now claimed by {label!r} — give each "
+                            "synchronization stage its own slot range"
+                        )
+        if claims:
+            for key in new.keys() & claims.keys():
+                owner = claims[key]
+                if owner != label:
+                    device, slot = key
+                    raise ValueError(
+                        f"flag slot collision: (device={device}, "
+                        f"slot={slot}) already allocated to {owner!r}, now "
+                        f"claimed by {label!r} — give each synchronization "
+                        "stage its own slot range"
+                    )
+        claims.update(new)
 
     def flag_addr(self, src_device: int, slot: int = 0) -> int:
         """Address of ``flags[slot][src_device]`` in the target's memory."""
@@ -188,8 +247,16 @@ class DirectoryMemory:
     # -- raw value plumbing ----------------------------------------------------
 
     def _store(self, addr: int, data: int, size: int) -> None:
-        for i in range(size):
-            self._mem[addr + i] = (data >> (8 * i)) & 0xFF
+        mem = self._mem
+        try:
+            # int.to_bytes does the little-endian byte split in C
+            bts = data.to_bytes(size, "little")
+        except OverflowError:  # negative or wider than size: masked split
+            for i in range(size):
+                mem[addr + i] = (data >> (8 * i)) & 0xFF
+            return
+        for i, b in enumerate(bts):
+            mem[addr + i] = b
 
     def _load(self, addr: int, size: int) -> int:
         val = 0
@@ -249,6 +316,60 @@ class DirectoryMemory:
         self.traffic.xgmi_bytes_in += w.size
         for fn in self._write_observers:
             fn(w.addr, w.data, w.size, cycle)
+
+    def enact_xgmi_group(
+        self, group: List[RegisteredWrite], cycle: int
+    ) -> None:
+        """Enact one WTT timestamp group: identical to calling
+        :meth:`enact_xgmi_write` per write in order, with the counter adds
+        coalesced (store order and observer order are preserved)."""
+        mem = self._mem
+        obs = self._write_observers
+        nbytes = 0
+        for w in group:
+            data = w.data
+            size = w.size
+            addr = w.addr
+            try:
+                bts = data.to_bytes(size, "little")
+            except OverflowError:
+                bts = ((data >> (8 * i)) & 0xFF for i in range(size))
+            for i, b in enumerate(bts):
+                mem[addr + i] = b
+            nbytes += size
+            for fn in obs:
+                fn(addr, data, size, cycle)
+        self.traffic.xgmi_writes_in += len(group)
+        self.traffic.xgmi_bytes_in += nbytes
+
+    def enact_xgmi_run(
+        self, addrs: List[int], cycles: List[int], data: int, size: int
+    ) -> None:
+        """Enact a bulk-popped run prefix: same-payload writes at per-write
+        cycles (see ``WriteTrackingTable.pop_due_run``).  Identical to
+        per-write :meth:`enact_xgmi_write` calls in order, with the byte
+        split and counter adds done once for the batch."""
+        mem = self._mem
+        obs = self._write_observers
+        try:
+            bts = tuple(enumerate(data.to_bytes(size, "little")))
+        except OverflowError:  # negative or wider than size: masked split
+            bts = tuple(
+                (i, (data >> (8 * i)) & 0xFF) for i in range(size)
+            )
+        if obs:
+            for addr, cyc in zip(addrs, cycles):
+                for i, b in bts:
+                    mem[addr + i] = b
+                for fn in obs:
+                    fn(addr, data, size, cyc)
+        else:
+            for addr in addrs:
+                for i, b in bts:
+                    mem[addr + i] = b
+        n = len(addrs)
+        self.traffic.xgmi_writes_in += n
+        self.traffic.xgmi_bytes_in += n * size
 
     # -- debugging convenience --------------------------------------------------
 

@@ -438,6 +438,7 @@ def simulate(
     nodes: Optional[int] = None,
     devices_per_node: Optional[int] = None,
     sanitize: bool = False,
+    timeline: Optional[bool] = None,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -478,6 +479,11 @@ def simulate(
     byte conservation, calendar monotonicity, and exactly-once flag delivery
     are asserted at the end of the run (raising ``SanitizerError`` on
     violation) without perturbing any simulated state.
+
+    ``timeline`` (closed loop only) selects the pod-scale timeline engine
+    (:mod:`repro.core.cohort_timeline`): ``None`` (default) auto-enables it
+    whenever the lockstep-lane invariant holds, ``True`` requires it (error
+    when ineligible), ``False`` always uses the per-phase interpreter.
     """
     from .simulator import Eidola  # late import: simulator imports target
 
@@ -507,11 +513,17 @@ def simulate(
             perturb=perturb,
             collect_segments=collect_segments,
             sanitize=sanitize,
+            timeline=timeline,
         ).run()
     if sanitize:
         raise ValueError(
             "sanitize=True requires a closed-loop scenario (the sanitizer "
             "shadows the cluster's fabric and directory accounting)"
+        )
+    if timeline is True:
+        raise ValueError(
+            "timeline=True requires a closed-loop scenario (the timeline "
+            "engine drives a Cluster of lockstep lanes)"
         )
     return Eidola(
         cfg,

@@ -81,9 +81,7 @@ class AllToAllScenario(Scenario):
             link_bw=link_bw,
         )
         # every rank announces dispatch completion in its slot-0 column
-        self.amap.claim_flag_slots(
-            "a2a_dispatch_barrier", ((d, 0) for d in range(k))
-        )
+        self.amap.claim_flag_block("a2a_dispatch_barrier", 0, 1)
         self.cost = Topology.flat_ring(k, axis="ep", hw=hw).collective(
             "all-to-all", self.payload_bytes, "ep"
         )

@@ -110,28 +110,15 @@ class HierarchicalAllReduceScenario(Scenario):
         )
         # the four stages get disjoint slot ranges; a collision here means
         # the layout arithmetic above regressed
-        devs = range(n)
         if dpn > 1:
-            self.amap.claim_flag_slots(
-                "hier_intra_ring",
-                ((d, s) for d in devs for s in range(dpn - 1)),
-            )
-            self.amap.claim_flag_slots(
-                "hier_shard_handoff", ((d, dpn - 1) for d in devs)
-            )
+            self.amap.claim_flag_block("hier_intra_ring", 0, dpn - 1)
+            self.amap.claim_flag_block("hier_shard_handoff", dpn - 1, dpn)
         if self.n_nodes > 1:
-            self.amap.claim_flag_slots(
-                "hier_leader_ring",
-                (
-                    (d, s)
-                    for d in devs
-                    for s in range(
-                        self.leader_slot_base, self.bcast_slot
-                    )
-                ),
+            self.amap.claim_flag_block(
+                "hier_leader_ring", self.leader_slot_base, self.bcast_slot
             )
-        self.amap.claim_flag_slots(
-            "hier_broadcast", ((d, self.bcast_slot) for d in devs)
+        self.amap.claim_flag_block(
+            "hier_broadcast", self.bcast_slot, self.bcast_slot + 1
         )
         self.params = {
             "payload_bytes": self.payload_bytes,
@@ -186,6 +173,15 @@ class HierarchicalAllReduceScenario(Scenario):
                     emits=self._emit(local_down, 0, chunk1),
                 )
             )
+            # loop-invariant traffic tuples hoisted (built once per device,
+            # not per ring step — pod-scale construction walks O(devices)
+            # steps per leader)
+            t_reduce = (
+                reads(2 * sectors1, cfg.sector_bytes),
+                local_writes(1, share1),
+                xgmi_out(1, share1),
+            )
+            t_reduce_last = t_reduce[:2]
             for s in range(dpn - 1):
                 phases.append(
                     PhaseSpec(
@@ -194,17 +190,11 @@ class HierarchicalAllReduceScenario(Scenario):
                     )
                 )
                 last_rs = s == dpn - 2
-                traffic = [
-                    reads(2 * sectors1, cfg.sector_bytes),
-                    local_writes(1, share1),
-                ]
-                if not last_rs:
-                    traffic.append(xgmi_out(1, share1))
                 phases.append(
                     PhaseSpec(
                         "hrs_reduce",
                         cycles1,
-                        traffic=tuple(traffic),
+                        traffic=t_reduce_last if last_rs else t_reduce,
                         emits=()
                         if last_rs
                         else self._emit(local_down, s + 1, chunk1),
@@ -252,6 +242,18 @@ class HierarchicalAllReduceScenario(Scenario):
                     emits=self._emit(down_leader, base, chunk2),
                 )
             )
+            # per-step traffic is one of three loop-invariant tuples
+            t_red = (
+                reads(2 * sectors2, cfg.sector_bytes),
+                local_writes(1, share2),
+                xgmi_out(1, share2),
+            )
+            t_gat = (
+                reads(sectors2, cfg.sector_bytes),
+                local_writes(1, share2),
+                xgmi_out(1, share2),
+            )
+            t_gat_last = t_gat[:2]
             for s in range(steps2):
                 phases.append(
                     PhaseSpec(
@@ -263,19 +265,13 @@ class HierarchicalAllReduceScenario(Scenario):
                 )
                 reducing = s < rs2
                 last = s == steps2 - 1
-                traffic = [
-                    reads(
-                        sectors2 * (2 if reducing else 1), cfg.sector_bytes
-                    ),
-                    local_writes(1, share2),
-                ]
-                if not last:
-                    traffic.append(xgmi_out(1, share2))
                 phases.append(
                     PhaseSpec(
                         "hir_reduce" if reducing else "hir_gather",
                         cycles2,
-                        traffic=tuple(traffic),
+                        traffic=t_red
+                        if reducing
+                        else (t_gat_last if last else t_gat),
                         emits=()
                         if last
                         else self._emit(down_leader, base + s + 1, chunk2),

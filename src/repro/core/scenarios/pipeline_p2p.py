@@ -87,14 +87,7 @@ class PipelineP2PScenario(Scenario):
             link_bw=link_bw,
         )
         # one flag slot per microbatch, each stage writing its own column
-        self.amap.claim_flag_slots(
-            "pipe_microbatch",
-            (
-                (d, m)
-                for d in range(cfg.n_devices)
-                for m in range(self.n_microbatches)
-            ),
-        )
+        self.amap.claim_flag_block("pipe_microbatch", 0, self.n_microbatches)
         self.cost = Topology.flat_ring(
             cfg.n_devices, axis="pp", hw=hw
         ).collective("collective-permute", self.activation_bytes, "pp")

@@ -88,10 +88,7 @@ class RingAllReduceScenario(Scenario):
             link_bw=link_bw,
         )
         # one flag slot per ring step, every rank writing its own column
-        self.amap.claim_flag_slots(
-            "ring_step",
-            ((d, s) for d in range(k) for s in range(self.steps)),
-        )
+        self.amap.claim_flag_block("ring_step", 0, self.steps)
         # Open-loop cadence keeps the flat single-ring collective algebra the
         # trace schedule was always derived from.
         self.cost = Topology.flat_ring(k, axis="ring", hw=hw).collective(

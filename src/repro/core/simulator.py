@@ -14,7 +14,7 @@ from typing import Dict, List, Optional, Sequence
 
 from .config import EngineKind, SimConfig, SyncPolicy
 from .engine import CyclePollEngine, EventQueueEngine
-from .events import RegisteredWrite, Segment, TraceBundle
+from .events import Segment, TraceBundle, effective_writes
 from .memory import AddressMap, DirectoryMemory
 from .monitor import MonitorLog
 from .scenario import Scenario
@@ -127,18 +127,13 @@ class Eidola:
             cfg, self.scenario, memory, monitor, perturb=self.perturb
         )
         wtt = WriteTrackingTable(clock_ghz=cfg.clock_ghz)
-        for w in self.traces:
-            eff = RegisteredWrite(
-                wakeup_ns=w.wakeup_ns + cfg.xgmi_enact_latency_ns,
-                addr=w.addr,
-                data=w.data,
-                size=w.size,
-                src=w.src,
-                seq=w.seq,
+        wtt.register_many(
+            effective_writes(
+                self.traces,
+                latency_ns=cfg.xgmi_enact_latency_ns,
+                perturb=self.perturb,
             )
-            if self.perturb is not None:
-                eff = self.perturb.jitter_write(eff)
-            wtt.register(eff)
+        )
         return memory, monitor, device, wtt
 
     def run(self) -> Report:

@@ -231,8 +231,17 @@ class TargetDevice:
         # are shared across programs, so this is O(distinct specs)).  A phase
         # completion then costs six integer adds instead of re-walking the
         # TrafficOp list; the arithmetic is identical to op.apply() per member.
+        # Cohorts overwhelmingly share one phases tuple (scenarios stamp every
+        # wg of a rank against the same tuple), so walk each distinct tuple
+        # once — at pod scale the redundant per-cohort walks dominated
+        # construction.
         self._tdelta: Dict[int, Optional[Tuple[int, int, int, int, int, int]]] = {}
+        seen_phase_tuples: Set[int] = set()
         for c in self.cohorts:
+            pid = id(c.phases)
+            if pid in seen_phase_tuples:
+                continue
+            seen_phase_tuples.add(pid)
             for spec in c.phases:
                 key = id(spec)
                 if key in self._tdelta:
@@ -253,9 +262,15 @@ class TargetDevice:
                         xbytes += op.n * op.bytes_each
                 self._tdelta[key] = (nonflag, rbytes, local, wbytes, xout, xbytes)
 
-        # every flag address some program may wait on
+        # every flag address some program may wait on (one walk per distinct
+        # phases tuple — wait_addresses() re-derives from the phases alone)
         self._watched: Set[int] = set()
+        seen_phase_tuples.clear()
         for c in self.cohorts:
+            pid = id(c.phases)
+            if pid in seen_phase_tuples:
+                continue
+            seen_phase_tuples.add(pid)
             self._watched.update(c.program.wait_addresses())
         self.flag_set_cycle: Dict[int, int] = {}
         # spin mode: flag addr -> set of blocked cohort indexes

@@ -23,27 +23,17 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from .config import SimConfig, SyncPolicy
-from .events import RegisteredWrite, Segment
+from .events import RegisteredWrite, Segment, effective_writes
 
 __all__ = ["run_vectorized"]
 
 
 def _effective_writes(sim) -> List[RegisteredWrite]:
-    cfg = sim.cfg
-    out = []
-    for w in sim.traces:
-        eff = RegisteredWrite(
-            wakeup_ns=w.wakeup_ns + cfg.xgmi_enact_latency_ns,
-            addr=w.addr,
-            data=w.data,
-            size=w.size,
-            src=w.src,
-            seq=w.seq,
-        )
-        if sim.perturb is not None:
-            eff = sim.perturb.jitter_write(eff)
-        out.append(eff)
-    return out
+    return effective_writes(
+        sim.traces,
+        latency_ns=sim.cfg.xgmi_enact_latency_ns,
+        perturb=sim.perturb,
+    )
 
 
 def run_vectorized(sim) -> "Report":  # noqa: F821 - avoids circular import

@@ -54,3 +54,15 @@ def test_architecture_md_verify_example_executes():
     # the example's asserts (static deadlock verdict, runtime agreement,
     # embedded diagnosis) run as written
     exec(compile(verify[0], "ARCHITECTURE.md:verify_scenario", "exec"), {})
+
+
+@pytest.mark.slow
+def test_architecture_md_pod_scale_example_executes():
+    # the 1024-device timeline-engine snippet runs as written (tens of
+    # seconds: a real pod-scale closed loop, hence the slow marker); a
+    # failure here means the doc lies about pod scale
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    pod = [b for b in blocks if "engine_impl" in b]
+    assert len(pod) == 1, "expected exactly one pod-scale code block"
+    exec(compile(pod[0], "ARCHITECTURE.md:pod_scale", "exec"), {})
