@@ -25,13 +25,15 @@ graph-based presets can never silently fall out of coverage.
 Pod scale (1024+ devices) rides the timeline engine
 (``repro.core.cohort_timeline``, auto-selected; rows still record
 ``engine="event"`` — same semantics — with ``engine_impl`` naming the
-implementation).  A skip policy keeps the sweep seconds-per-row: the flat
-single-tier shape is skipped at >= 1024 devices and the O(devices^2)-phase
-collectives (ring_allreduce, all_to_all) at >= 1024, each with a printed
-reason, never silently.  Rows carry a ``wall_breakdown`` section-timing dict
-(interpreter/fabric/WTT seconds) when the timeline engine ran; like
-``wall_time_s`` it is measurement metadata, not simulation physics, so
-``--check`` ignores it.
+implementation).  The flat ring_allreduce / all_to_all pod rows go further:
+their symbolic programs (``LoopSpec`` segments) engage the lockstep bulk
+solver (``repro.core.lockstep``), giving real 1024/4096-device rows in
+seconds where the unrolled programs used to take minutes.  A skip policy
+keeps the remaining sweep seconds-per-row (tiered ring/all_to_all and the
+flat hierarchical/pipeline shapes at >= 1024), each with a printed reason,
+never silently.  Rows carry a ``wall_breakdown`` section-timing dict when
+the timeline engine or lockstep solver ran; like ``wall_time_s`` it is
+measurement metadata, not simulation physics, so ``--check`` ignores it.
 
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
      [--quick] [--devices 4,8,...] [--scenarios a,b] [--repeats N]
@@ -87,24 +89,34 @@ def pod_skip_reason(name: str, devices: int, dpn) -> str | None:
     sweep, or None to run it.  Pod-scale coverage is deliberate, not silent:
     every exclusion prints its reason.
 
-    * flat single-tier at >= 1024 devices: the flat shape exists to contrast
-      tier routing, which pod-scale rows are not about; for
-      hierarchical_allreduce it additionally degenerates to an
-      O(devices)-step intra ring per device (hours of wall);
-    * ring_allreduce / all_to_all at >= 1024: their programs are
-      O(devices) phases x O(devices) ranks (global ring steps, full
-      dispatch incast) — O(devices^2) work that no engine makes
-      seconds-scale (measured: 512 s / 286 s at 1024 devices even on the
-      timeline engine); the 256-device tiered rows pin their scaling.
+    * flat ring_allreduce / all_to_all at >= 1024 devices RUN: their
+      symbolic programs (LoopSpec segments, O(1) construction per rank)
+      ride the lockstep bulk solver, which advances all ranks x all loop
+      steps in closed form — real seconds-scale rows where the unrolled
+      programs used to cost 512 s / 286 s at 1024 devices;
+    * tiered ring_allreduce / all_to_all at >= 1024: the tiered fabric is
+      outside the lockstep solver's flat-ring eligibility, so the generic
+      timeline engine would walk O(devices) phases x O(devices) lanes
+      (minutes of wall); the 256-device tiered rows pin that scaling;
+    * flat single-tier hierarchical_allreduce / pipeline_p2p at >= 1024:
+      the flat shape exists to contrast tier routing, which their pod rows
+      are not about; for hierarchical_allreduce it additionally degenerates
+      to an O(devices)-step intra ring per device (hours of wall).
     """
-    if devices >= 1024 and dpn is None:
-        return "flat single-tier shape skipped at pod scale"
-    if devices >= 1024 and name in ("ring_allreduce", "all_to_all"):
+    if devices < 1024:
+        return None
+    if name in ("ring_allreduce", "all_to_all"):
+        if dpn is None:
+            return None  # symbolic program + lockstep solver: seconds-scale
         return (
-            f"{name} skipped at {devices} devices: O(devices^2) program "
-            "phases (global ring / full incast) take minutes on any "
-            "engine; 256-device tiered rows pin its scaling"
+            f"{name} tiered shape skipped at {devices} devices: outside "
+            "the lockstep solver's flat-ring eligibility, the timeline "
+            "engine walks O(devices^2) phases (minutes of wall); "
+            "256-device tiered rows pin its scaling, flat pod rows ride "
+            "the lockstep solver"
         )
+    if dpn is None:
+        return "flat single-tier shape skipped at pod scale"
     return None
 
 

@@ -20,7 +20,7 @@ from repro.core import (
     SyncPolicy,
     run_gemv_allreduce,
 )
-from repro.core.timeline import ascii_timeline, phase_totals
+from repro.core.trace_render import ascii_timeline, phase_totals
 
 SWEEP_US = list(range(0, 41, 5))  # the paper's 0..40 us wakeupTime sweep
 

@@ -13,6 +13,15 @@ timeline-ineligible only by *declaring why* (a ``timeline_opt_out`` reason
 string on the scenario class); an undeclared ineligibility is a failure —
 pod-scale coverage must never rot silently.  ``--no-timeline`` skips this
 stage (static-only runs).
+
+Finally it verifies **symbolic programs in loop space**: every closed-loop
+scenario whose ranks stamp :class:`repro.core.scenario.SymbolicProgram`\\ s
+is checked at ``--pod-devices`` scale (default 1024) with one node per
+(lane, affine pattern) — O(segments), never the O(devices x steps) sites a
+materialized lowering would need — and the loop-space verdict is
+cross-checked against the materialized verifier at ``--devices`` scale.
+Non-rank-uniform scenarios (e.g. hierarchical stages) are reported as
+covered by the materialized path.  ``--no-symbolic`` skips the stage.
 """
 
 from __future__ import annotations
@@ -100,6 +109,49 @@ def _verify_timeline_path(devices: int, dpn: int, quiet: bool) -> int:
     return failures
 
 
+def _verify_symbolic_path(
+    small_devices: int, pod_devices: int, quiet: bool
+) -> int:
+    """Loop-space verification at pod scale + materialized cross-check at
+    small scale.  Returns the failure count."""
+    from .verify import verify_scenario, verify_symbolic
+
+    failures = 0
+    combos = 0
+    for name in list_scenarios():
+        try:
+            v = verify_symbolic(name, devices=pod_devices, closed_loop=True)
+        except TypeError:
+            continue  # open-loop-only scenario
+        combos += 1
+        shape = [f for f in v.findings if f.kind == "symbolic-shape"]
+        if shape:
+            if not quiet:
+                print(f"{name}: symbolic verify n/a (materialized path "
+                      f"covers it): {shape[0].message}")
+            continue
+        if not v.ok:
+            failures += 1
+            print(v.render())
+            continue
+        # the loop-space verdict must agree with the exact per-step graph
+        # at a scale where materializing is affordable
+        vm = verify_scenario(name, devices=small_devices, closed_loop=True)
+        vs = verify_symbolic(name, devices=small_devices, closed_loop=True)
+        if vs.ok != vm.ok:
+            failures += 1
+            print(f"{name}: FAIL loop-space verdict ({'ok' if vs.ok else 'error'}) "
+                  f"disagrees with the materialized verifier "
+                  f"({'ok' if vm.ok else 'error'}) at {small_devices} devices")
+        elif not quiet:
+            print(f"{name}: symbolic loop-space verify ok at {pod_devices} "
+                  f"devices (cross-checked at {small_devices})")
+    tag = "FAILED" if failures else "ok"
+    print(f"verified {combos} symbolic-program combinations: {tag}"
+          + (f" ({failures} with errors)" if failures else ""))
+    return failures
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -114,6 +166,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument(
         "--no-timeline", action="store_true",
         help="skip the dynamic timeline-engine verification stage",
+    )
+    ap.add_argument(
+        "--pod-devices", type=int, default=1024,
+        help="device count for the loop-space symbolic verification stage",
+    )
+    ap.add_argument(
+        "--no-symbolic", action="store_true",
+        help="skip the loop-space symbolic verification stage",
     )
     args = ap.parse_args(argv)
 
@@ -148,6 +208,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not args.no_timeline:
         failures += _verify_timeline_path(
             args.devices, args.devices_per_node, args.quiet
+        )
+    if not args.no_symbolic:
+        failures += _verify_symbolic_path(
+            args.devices, args.pod_devices, args.quiet
         )
     return 1 if failures else 0
 

@@ -23,6 +23,14 @@ Terminology:
 * **external flag** — a flag written by a pre-scheduled trace
   (``scenario.traces_for``), i.e. satisfied unconditionally at some time.
   Open-loop scenarios synchronize exclusively through these.
+
+This lowering is *materialized*: iterating ``lane.phases`` expands any
+:class:`repro.core.scenario.SymbolicProgram` step by step, so site counts
+grow with the step count (O(devices^2) for flat collectives).  At pod scale
+use :func:`repro.analysis.verify.verify_symbolic` instead, which checks
+rank-uniform symbolic programs in *loop space* — one node per (lane, affine
+pattern) via :func:`repro.core.lockstep.plan_stages` — and is cross-checked
+against this exact graph at small scale by ``python -m repro.analysis``.
 """
 
 from __future__ import annotations

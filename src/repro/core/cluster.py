@@ -26,6 +26,7 @@ cycle/event runs stay bit-identical, which the tests assert per scenario.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Union
 
@@ -35,7 +36,7 @@ from .events import RegisteredWrite, Segment
 from .interconnect import InterconnectSpec, build_fabric
 from .memory import DirectoryMemory
 from .monitor import MonitorLog
-from .scenario import EmitOp, PhaseSpec, Scenario
+from .scenario import EmitOp, PhaseSpec, Scenario, SymbolicProgram
 from .target import TargetDevice
 from .topology import V5E, FabricModel, Topology
 from .wtt import LazyWriteRun, RegistrationLike, WriteTrackingTable
@@ -153,6 +154,7 @@ class Cluster:
         cohorts: bool = True,
         sanitize: bool = False,
         timeline: Optional[bool] = None,
+        lockstep: Optional[bool] = None,
     ):
         self.cfg = cfg.validate()
         self.scenario = scenario
@@ -162,6 +164,9 @@ class Cluster:
         # None = auto (use the timeline engine when eligible), True = require
         # it (error when ineligible), False = never
         self._timeline = timeline
+        # same tri-state for the bulk lockstep solver, which substitutes for
+        # the timeline engine on rank-uniform symbolic programs
+        self._lockstep = lockstep
         self._cohorts_flag = cohorts
         self.fabric = resolve_cluster_fabric(
             self.cfg, scenario, fabric=fabric, topology=topology
@@ -181,6 +186,7 @@ class Cluster:
         # dst device -> marker data writes placed so far (address spacing)
         self._data_marks: Dict[int, int] = {}
 
+        t0 = time.perf_counter()
         self.nodes: List[ClusterNode] = []
         for d in range(cfg.n_devices):
             memory = DirectoryMemory(self.amap)
@@ -221,6 +227,10 @@ class Cluster:
                 if self._san is not None:
                     self._san.note_seed_write(node.device_id, eff.addr)
                 node.wtt.register(eff)
+        # program-construction wall (nodes + seed traces), surfaced in
+        # Report.meta["program_stats"] — symbolic programs keep this O(1)
+        # per rank in step count where flat construction was O(steps)
+        self._construct_wall_s = time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     # emission: phase completion -> fabric -> destination WTT
@@ -447,6 +457,7 @@ class Cluster:
         # holds; timeline=True makes ineligibility an error instead of a
         # silent fallback.
         use_timeline = False
+        lockstep_used = False
         tl_reason: Optional[str] = None
         if cfg.engine == EngineKind.EVENT and self._timeline is not False:
             if not self._cohorts_flag:
@@ -462,10 +473,38 @@ class Cluster:
             raise ValueError(
                 f"timeline engine requested but unavailable: {tl_reason}"
             )
+        if self._lockstep is True and not use_timeline:
+            raise ValueError(
+                "lockstep solver requested but unavailable: it substitutes "
+                "for the timeline engine, which is not in use here "
+                f"({tl_reason or 'engine is not EngineKind.EVENT'})"
+            )
         if use_timeline:
-            from .cohort_timeline import TimelineEngine
+            # the bulk lockstep solver substitutes for the timeline engine
+            # when every rank runs the same symbolic program shape on the
+            # flat ring; anything else falls back to the generic timeline
+            ls_reason: Optional[str] = None
+            ls_engine = None
+            if self._lockstep is not False:
+                from .lockstep import LockstepEngine, lockstep_support
 
-            res = TimelineEngine(self).run()
+                ls_reason = lockstep_support(self)
+                if ls_reason is None:
+                    ls_engine = LockstepEngine(self)
+                    ls_reason = ls_engine.compile()
+            else:
+                ls_reason = "lockstep=False disables the bulk solver"
+            if self._lockstep is True and ls_reason is not None:
+                raise ValueError(
+                    f"lockstep solver requested but unavailable: {ls_reason}"
+                )
+            if ls_reason is None:
+                res = ls_engine.run()
+                lockstep_used = True
+            else:
+                from .cohort_timeline import TimelineEngine
+
+                res = TimelineEngine(self).run()
             engine_name = "event"  # same semantics & counters as the event
             # engine; meta["engine_impl"] records the implementation
         else:
@@ -497,6 +536,27 @@ class Cluster:
             )
             if self.collect_segments:
                 segments.extend(node.target.collect_segments())
+        # symbolic-vs-materialized program accounting (after the run, so the
+        # materialized count reflects what the engines actually expanded)
+        progs: Dict[int, object] = {}
+        for node in self.nodes:
+            for c in node.target.cohorts:
+                progs.setdefault(id(c.phases), c.phases)
+        sym = [p for p in progs.values() if isinstance(p, SymbolicProgram)]
+        program_stats = {
+            "symbolic_programs": len(sym),
+            "flat_programs": len(progs) - len(sym),
+            "segments": sum(len(p.segments) for p in sym),
+            "program_phases": sum(len(p) for p in progs.values()),
+            "materialized_phases": sum(len(p._memo) for p in sym)
+            + sum(
+                len(p)
+                for p in progs.values()
+                if not isinstance(p, SymbolicProgram)
+            ),
+            "construct_wall_s": self._construct_wall_s,
+            "lockstep": lockstep_used,
+        }
         return Report(
             engine=engine_name,
             sync=cfg.sync.value,
@@ -516,6 +576,7 @@ class Cluster:
                 "closed_loop": True,
                 "sanitized": self._san is not None,
                 "engine_impl": "timeline" if use_timeline else engine_name,
+                "program_stats": program_stats,
                 **(
                     {"wall_breakdown": res.breakdown}
                     if res.breakdown is not None

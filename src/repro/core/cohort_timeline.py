@@ -5,7 +5,8 @@ the event engine still walks *every phase of every cohort* through a Python
 heap: at 256 devices the 305k ``_advance`` calls dominate the wall clock, and
 pod-scale sweeps (1024-4096 devices) are out of reach.  This module is the
 ``vector_engine.py`` spin-read treatment generalized to the N-device closed
-loop.
+loop.  (Not to be confused with :mod:`repro.core.trace_render` — formerly
+``repro.core.timeline`` — which only draws/exports finished segment lists.)
 
 The key invariant — **lockstep lanes** — makes it possible.  Under SPIN with
 no perturbation, whether a wait blocks is decided by whether the flag's set
@@ -115,25 +116,29 @@ class _ProgramTable:
     __slots__ = ("specs", "n", "is_wait", "dur", "wait_addrs", "tdelta",
                  "names", "emits", "all_last")
 
-    def __init__(
-        self,
-        phases: Tuple[PhaseSpec, ...],
-        tdelta: Dict[int, Optional[Tuple[int, int, int, int, int, int]]],
-    ):
-        self.specs = phases
-        self.n = len(phases)
-        self.is_wait = [sp.wait_addrs is not None for sp in phases]
+    def __init__(self, phases, tdelta_for=None):
+        # ``phases`` may be a flat tuple or a SymbolicProgram — iterating the
+        # latter materializes (memoized) PhaseSpecs, which is fine here: the
+        # generic lane path is per-step anyway, and the bulk lockstep solver
+        # (``core.lockstep``) takes over before this table is ever built for
+        # the pod-scale flat collectives.
+        specs = tuple(phases)
+        self.specs = specs
+        self.n = len(specs)
+        self.is_wait = [sp.wait_addrs is not None for sp in specs]
         self.dur = [
             0 if sp.wait_addrs is not None else sp.duration_cycles
-            for sp in phases
+            for sp in specs
         ]
-        self.wait_addrs = [sp.wait_addrs for sp in phases]
-        self.tdelta = [tdelta[id(sp)] for sp in phases]
-        self.names = [sp.name for sp in phases]
-        self.emits = [sp.emits for sp in phases]
+        self.wait_addrs = [sp.wait_addrs for sp in specs]
+        self.tdelta = [
+            tdelta_for(sp) if tdelta_for is not None else None for sp in specs
+        ]
+        self.names = [sp.name for sp in specs]
+        self.emits = [sp.emits for sp in specs]
         self.all_last = [
             bool(sp.emits) and all(op.coalesce == "last" for op in sp.emits)
-            for sp in phases
+            for sp in specs
         ]
 
 
@@ -359,10 +364,10 @@ class TimelineEngine:
                 phases = tgt.cohorts[0].phases
                 tab = tables.get(id(phases))
                 if tab is None:
-                    tab = _ProgramTable(phases, tgt._tdelta)
+                    tab = _ProgramTable(phases, tgt._tdelta_for)
                     tables[id(phases)] = tab
             else:
-                tab = _ProgramTable((), {})
+                tab = _ProgramTable(())
             self.lanes.append(_Lane(node.device_id, tgt, tab, seg_mode))
         # (cycle, device, first_member, phase_idx, tie, ops)
         self._emissions: List[tuple] = []

@@ -27,8 +27,20 @@ from __future__ import annotations
 
 import abc
 import itertools
+from bisect import bisect_right
 from dataclasses import dataclass, fields
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type, Union
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Type,
+    Union,
+)
 
 from .config import EngineKind, SimConfig
 from .events import TraceBundle
@@ -40,6 +52,14 @@ __all__ = [
     "EmitOp",
     "PhaseSpec",
     "WGProgram",
+    "Affine",
+    "AffineRun",
+    "EmitRun",
+    "LoopEmit",
+    "LoopPhase",
+    "LoopSpec",
+    "SymbolicProgram",
+    "affine_of",
     "Scenario",
     "register_scenario",
     "get_scenario",
@@ -200,6 +220,347 @@ class WGProgram:
             if ph.wait_addrs:
                 out.extend(ph.wait_addrs)
         return out
+
+
+# ---------------------------------------------------------------------------
+# symbolic program IR: compressed loop phases
+# ---------------------------------------------------------------------------
+#
+# Flat closed-loop collectives build O(devices) phases for O(devices) ranks —
+# quadratic PhaseSpec construction that dominated 1024-device wall time.  The
+# IR below represents a *run* of ring/incast steps as one object with affine
+# step-indexed fields.  ``SymbolicProgram`` is a drop-in replacement for a
+# ``Tuple[PhaseSpec, ...]``: it supports ``len``/indexing/iteration/equality,
+# materializes individual steps lazily (memoized, so step identity is stable
+# for id-keyed engine caches), and ``expand()`` reproduces the pre-refactor
+# flat tuple bit-identically.  Engines and the verifier read ``.segments``
+# directly to advance or check whole loops without unrolling.
+
+
+@dataclass(frozen=True)
+class Affine:
+    """An integer affine function ``base + step * k`` of the loop index."""
+
+    base: int
+    step: int = 0
+
+    def at(self, k: int) -> int:
+        return self.base + self.step * k
+
+
+def affine_of(fn: Callable[[int], int], k0: int, count: int) -> Affine:
+    """Derive the :class:`Affine` matching ``fn`` on ``[k0, k0+count)``.
+
+    Sampled at the first two points and verified at the last, so non-affine
+    layouts (e.g. a custom AddressMap) fail loudly instead of silently
+    mis-compressing.
+    """
+    v0 = fn(k0)
+    if count <= 1:
+        return Affine(v0, 0)
+    step = fn(k0 + 1) - v0
+    last = k0 + count - 1
+    if fn(last) != v0 + step * (count - 1):
+        raise ValueError("function is not affine over the loop range")
+    return Affine(v0 - step * k0, step)
+
+
+@dataclass(frozen=True)
+class AffineRun:
+    """A compressed *within-phase* arithmetic run of ``count`` addresses
+    ``start, start+stride, ...`` (e.g. the all-to-all wait list over peers)."""
+
+    start: int
+    stride: int
+    count: int
+
+    def __post_init__(self) -> None:
+        if self.count < 0:
+            raise ValueError("AffineRun.count must be >= 0")
+
+    def expand(self) -> Tuple[int, ...]:
+        return tuple(self.start + self.stride * j for j in range(self.count))
+
+
+@dataclass(frozen=True)
+class EmitRun:
+    """``count`` :class:`EmitOp`\\ s whose dst/slot advance affinely with the
+    member index ``j`` (shared payload/marker/coalesce fields) — the per-peer
+    fan-out of an incast phase as one descriptor."""
+
+    count: int
+    dst0: int
+    dst_stride: int = 1
+    slot0: int = 0
+    slot_stride: int = 0
+    data: int = 1
+    size: int = 8
+    payload_bytes: int = 0
+    data_writes: int = 0
+    coalesce: str = "last"
+
+    def __post_init__(self) -> None:
+        if self.count < 0:
+            raise ValueError("EmitRun.count must be >= 0")
+
+    def expand(self) -> Tuple[EmitOp, ...]:
+        return tuple(
+            EmitOp(
+                self.dst0 + j * self.dst_stride,
+                slot=self.slot0 + j * self.slot_stride,
+                data=self.data,
+                size=self.size,
+                payload_bytes=self.payload_bytes,
+                data_writes=self.data_writes,
+                coalesce=self.coalesce,
+            )
+            for j in range(self.count)
+        )
+
+
+@dataclass(frozen=True)
+class LoopEmit:
+    """An :class:`EmitOp` template whose dst/slot are :class:`Affine` in the
+    loop index ``k`` (the ring step's downstream emit)."""
+
+    dst: Affine
+    slot: Affine = Affine(0)
+    data: int = 1
+    size: int = 8
+    payload_bytes: int = 0
+    data_writes: int = 0
+    coalesce: str = "last"
+
+    def at(self, k: int) -> EmitOp:
+        return EmitOp(
+            self.dst.at(k),
+            slot=self.slot.at(k),
+            data=self.data,
+            size=self.size,
+            payload_bytes=self.payload_bytes,
+            data_writes=self.data_writes,
+            coalesce=self.coalesce,
+        )
+
+
+#: wait entries a LoopPhase accepts: a literal address, an address affine in
+#: the loop index, or a within-phase run of addresses (constant in k).
+WaitEntry = Union[int, Affine, AffineRun]
+#: emit entries a LoopPhase accepts.
+EmitEntry = Union[EmitOp, LoopEmit, EmitRun]
+
+
+@dataclass(frozen=True)
+class LoopPhase:
+    """A :class:`PhaseSpec` *template* evaluated at a loop index ``k``.
+
+    ``traffic`` is loop-invariant (the built-in collectives move the same
+    bytes every step); step-dependent addressing lives in ``wait_addrs`` /
+    ``emits`` entries, which may be symbolic (:class:`Affine`,
+    :class:`AffineRun`, :class:`LoopEmit`, :class:`EmitRun`).
+    """
+
+    name: str
+    duration_cycles: int = 0
+    traffic: Tuple[TrafficOp, ...] = ()
+    wait_addrs: Optional[Tuple[WaitEntry, ...]] = None
+    emits: Tuple[EmitEntry, ...] = ()
+
+    @property
+    def is_wait(self) -> bool:
+        return self.wait_addrs is not None
+
+    def at(self, k: int) -> PhaseSpec:
+        waits: Optional[Tuple[int, ...]] = None
+        if self.wait_addrs is not None:
+            acc: List[int] = []
+            for w in self.wait_addrs:
+                if isinstance(w, AffineRun):
+                    acc.extend(w.expand())
+                elif isinstance(w, Affine):
+                    acc.append(w.at(k))
+                else:
+                    acc.append(w)
+            waits = tuple(acc)
+        ems: List[EmitOp] = []
+        for e in self.emits:
+            if isinstance(e, EmitRun):
+                ems.extend(e.expand())
+            elif isinstance(e, LoopEmit):
+                ems.append(e.at(k))
+            else:
+                ems.append(e)
+        return PhaseSpec(self.name, self.duration_cycles, self.traffic, waits, tuple(ems))
+
+
+@dataclass(frozen=True)
+class LoopSpec:
+    """``count`` iterations of ``body`` with the loop index running
+    ``k = k0, k0+1, ..., k0+count-1`` — one object standing for
+    ``count * len(body)`` phases."""
+
+    count: int
+    body: Tuple[LoopPhase, ...]
+    k0: int = 0
+
+    def __post_init__(self) -> None:
+        if self.count < 0:
+            raise ValueError("LoopSpec.count must be >= 0")
+        if not self.body:
+            raise ValueError("LoopSpec.body must be non-empty")
+        for ph in self.body:
+            if not isinstance(ph, LoopPhase):
+                raise TypeError("LoopSpec.body entries must be LoopPhase")
+
+    @property
+    def n_phases(self) -> int:
+        return self.count * len(self.body)
+
+
+#: a SymbolicProgram segment: a literal phase, a single compressed phase
+#: (evaluated at k = 0), or a counted loop of compressed phases.
+Segment = Union[PhaseSpec, LoopPhase, LoopSpec]
+
+
+class SymbolicProgram:
+    """A compressed per-rank phase program.
+
+    Drop-in replacement for a flat ``Tuple[PhaseSpec, ...]`` in
+    :class:`WGProgram.phases`: sequence protocol (``len``/index/iterate),
+    value equality against other programs *and* flat tuples, and a
+    bit-identical :meth:`expand`.  Individual phases materialize lazily and
+    are memoized, so ``program[i] is program[i]`` — engine caches keyed by
+    phase identity keep working.  Bulk engines skip materialization entirely
+    and read :attr:`segments`.
+
+    Note: equality with flat tuples is supported but hashes differ — don't
+    mix symbolic and materialized programs as keys of one dict.
+    """
+
+    __slots__ = ("segments", "_starts", "_len", "_memo", "_hash")
+
+    def __init__(self, segments: Iterable[Segment]):
+        segs: List[Segment] = []
+        starts: List[int] = []
+        n = 0
+        for s in segments:
+            if isinstance(s, LoopSpec):
+                cnt = s.n_phases
+                if cnt == 0:
+                    continue  # empty loops contribute no phases
+            elif isinstance(s, (PhaseSpec, LoopPhase)):
+                cnt = 1
+            else:
+                raise TypeError(
+                    "SymbolicProgram segments must be PhaseSpec, LoopPhase, or LoopSpec"
+                )
+            segs.append(s)
+            starts.append(n)
+            n += cnt
+        self.segments: Tuple[Segment, ...] = tuple(segs)
+        self._starts: Tuple[int, ...] = tuple(starts)
+        self._len = n
+        self._memo: Dict[int, PhaseSpec] = {}
+        self._hash: Optional[int] = None
+
+    # -- sequence protocol --------------------------------------------------
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return tuple(self[j] for j in range(*i.indices(self._len)))
+        if i < 0:
+            i += self._len
+        if not 0 <= i < self._len:
+            raise IndexError("phase index out of range")
+        got = self._memo.get(i)
+        if got is None:
+            si = bisect_right(self._starts, i) - 1
+            seg = self.segments[si]
+            if isinstance(seg, PhaseSpec):
+                got = seg
+            elif isinstance(seg, LoopPhase):
+                got = seg.at(0)
+            else:
+                k, b = divmod(i - self._starts[si], len(seg.body))
+                got = seg.body[b].at(seg.k0 + k)
+            self._memo[i] = got
+        return got
+
+    def __iter__(self) -> Iterator[PhaseSpec]:
+        for i in range(self._len):
+            yield self[i]
+
+    def __eq__(self, other):
+        if self is other:
+            return True
+        if isinstance(other, SymbolicProgram):
+            if self.segments == other.segments:
+                return True
+            if self._len != other._len:
+                return False
+            return all(a == b for a, b in zip(self, other))
+        if isinstance(other, tuple):
+            if len(other) != self._len:
+                return False
+            return all(a == b for a, b in zip(self, other))
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        if self._hash is None:
+            self._hash = hash(self.segments)
+        return self._hash
+
+    def __repr__(self) -> str:
+        return f"SymbolicProgram({self._len} phases, {len(self.segments)} segments)"
+
+    # -- materialization and summaries --------------------------------------
+
+    def expand(self) -> Tuple[PhaseSpec, ...]:
+        """Materialize the flat phase tuple — bit-identical to the
+        pre-refactor construction."""
+        return tuple(self[i] for i in range(self._len))
+
+    def wait_runs(self) -> Tuple[List[int], List[Tuple[int, int, int]]]:
+        """Every wait address as a literal or a ``(start, stride, count)``
+        arithmetic run, in O(#segments) — never O(steps).  Membership
+        summary for engine watch sets."""
+        literals: List[int] = []
+        runs: List[Tuple[int, int, int]] = []
+        for seg in self.segments:
+            if isinstance(seg, PhaseSpec):
+                if seg.wait_addrs:
+                    literals.extend(seg.wait_addrs)
+                continue
+            if isinstance(seg, LoopPhase):
+                body: Tuple[LoopPhase, ...] = (seg,)
+                count, k0 = 1, 0
+            else:
+                body, count, k0 = seg.body, seg.count, seg.k0
+            for ph in body:
+                if not ph.wait_addrs:
+                    continue
+                for w in ph.wait_addrs:
+                    if isinstance(w, AffineRun):
+                        # constant in k: the same run re-awaited each
+                        # iteration — one membership run suffices.
+                        if w.count:
+                            runs.append((w.start, w.stride, w.count))
+                    elif isinstance(w, Affine):
+                        if w.step == 0 or count == 1:
+                            literals.append(w.at(k0))
+                        else:
+                            runs.append((w.at(k0), w.step, count))
+                    else:
+                        literals.append(w)
+        return literals, runs
+
+
+def as_symbolic(phases) -> Optional[SymbolicProgram]:
+    """Return ``phases`` as a :class:`SymbolicProgram` if it is one."""
+    return phases if isinstance(phases, SymbolicProgram) else None
 
 
 # ---------------------------------------------------------------------------
@@ -439,6 +800,7 @@ def simulate(
     devices_per_node: Optional[int] = None,
     sanitize: bool = False,
     timeline: Optional[bool] = None,
+    lockstep: Optional[bool] = None,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -484,6 +846,12 @@ def simulate(
     (:mod:`repro.core.cohort_timeline`): ``None`` (default) auto-enables it
     whenever the lockstep-lane invariant holds, ``True`` requires it (error
     when ineligible), ``False`` always uses the per-phase interpreter.
+
+    ``lockstep`` (closed loop only) is the same tri-state for the bulk
+    lockstep solver (:mod:`repro.core.lockstep`), which substitutes for the
+    timeline engine when every rank runs the same symbolic program shape on
+    the flat ring — whole loops advance as closed forms instead of per-phase
+    interpretation, making 1024-4096 device flat collectives practical.
     """
     from .simulator import Eidola  # late import: simulator imports target
 
@@ -514,6 +882,7 @@ def simulate(
             collect_segments=collect_segments,
             sanitize=sanitize,
             timeline=timeline,
+            lockstep=lockstep,
         ).run()
     if sanitize:
         raise ValueError(
@@ -524,6 +893,11 @@ def simulate(
         raise ValueError(
             "timeline=True requires a closed-loop scenario (the timeline "
             "engine drives a Cluster of lockstep lanes)"
+        )
+    if lockstep is True:
+        raise ValueError(
+            "lockstep=True requires a closed-loop scenario (the bulk solver "
+            "advances a Cluster of rank-uniform symbolic programs)"
         )
     return Eidola(
         cfg,

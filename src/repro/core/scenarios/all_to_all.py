@@ -23,10 +23,15 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    AffineRun,
     EmitOp,
+    EmitRun,
+    LoopPhase,
     PhaseSpec,
     Scenario,
+    SymbolicProgram,
     WGProgram,
+    affine_of,
     local_writes,
     reads,
     register_scenario,
@@ -105,14 +110,11 @@ class AllToAllScenario(Scenario):
         cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
         return share, sectors, cycles
 
-    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
-        """Dispatch -> incast barrier -> combine, for one rank.
-
-        ``rank`` waits on every peer's completion flag; with ``emit`` its own
-        dispatch phase pushes a completion flag to each peer over the fabric
-        (per-rank dispatch skew then *emerges* from dispatch compute + link
-        serialization instead of the open-loop ``skew_ns`` constant).
-        """
+    def _flat_phases(self, rank: int, *, emit: bool):
+        """Pre-refactor flat phase construction — O(devices) wait addresses
+        and EmitOps per rank.  Kept as the reference oracle for
+        ``SymbolicProgram.expand()`` equivalence (property-tested); runtime
+        paths use :meth:`_symbolic_phases`."""
         cfg = self.cfg
         n_peers = cfg.n_egpus
         share, sectors, cycles = self._shares()
@@ -143,11 +145,7 @@ class AllToAllScenario(Scenario):
         ]
         if not emit:
             dispatch_traffic.append(xgmi_out(n_peers, 8))
-        # one shared phases tuple per rank (see ring_allreduce._rank_programs:
-        # phases are workgroup-invariant, so stamping per-WG records against a
-        # shared tuple removes the O(workgroups) construction factor and feeds
-        # the cohort interpreter's identity-based grouping)
-        shared = (
+        return (
             # route + push our token shard to every peer, then the
             # completion flag write to each of them
             PhaseSpec(
@@ -168,6 +166,82 @@ class AllToAllScenario(Scenario):
                 ),
             ),
         )
+
+    def _symbolic_phases(self, rank: int, *, emit: bool) -> SymbolicProgram:
+        """The same program as :meth:`_flat_phases`, compressed: the per-peer
+        fan-out and the incast barrier's wait list become *within-phase* runs
+        (:class:`EmitRun` / :class:`AffineRun`), split around our own rank —
+        O(1) objects per rank in device count."""
+        cfg = self.cfg
+        n = cfg.n_devices
+        n_peers = cfg.n_egpus
+        share, sectors, cycles = self._shares()
+        peer_share = max(1, share // n)
+        peer_chunk = max(1, self.payload_bytes // n)
+        # barrier flag addresses are affine in the writer id (verified over
+        # the full device range, not assumed from the AddressMap layout)
+        flag_aff = affine_of(lambda g: self.amap.flag_addr(g), 0, n)
+        below, above = rank, n - 1 - rank
+        wait_entries = tuple(
+            AffineRun(flag_aff.at(g0), flag_aff.step, cnt)
+            for g0, cnt in ((0, below), (rank + 1, above))
+            if cnt
+        )
+        emit_entries = (
+            tuple(
+                EmitRun(
+                    cnt,
+                    dst0=g0,
+                    payload_bytes=peer_chunk,
+                    data_writes=self.writes_per_peer,
+                )
+                for g0, cnt in ((0, below), (rank + 1, above))
+                if cnt
+            )
+            if emit
+            else ()
+        )
+        dispatch_traffic = [
+            reads(sectors, cfg.sector_bytes),
+            xgmi_out(n_peers, peer_share),
+        ]
+        if not emit:
+            dispatch_traffic.append(xgmi_out(n_peers, 8))
+        return SymbolicProgram(
+            (
+                LoopPhase(
+                    "a2a_dispatch",
+                    cycles,
+                    traffic=tuple(dispatch_traffic),
+                    emits=emit_entries,
+                ),
+                LoopPhase("wait_flags", wait_addrs=wait_entries),
+                PhaseSpec(
+                    "a2a_combine",
+                    cycles * n,
+                    traffic=(
+                        reads(sectors * n, cfg.sector_bytes),
+                        local_writes(1, share),
+                    ),
+                ),
+            )
+        )
+
+    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
+        """Dispatch -> incast barrier -> combine, for one rank.
+
+        ``rank`` waits on every peer's completion flag; with ``emit`` its own
+        dispatch phase pushes a completion flag to each peer over the fabric
+        (per-rank dispatch skew then *emerges* from dispatch compute + link
+        serialization instead of the open-loop ``skew_ns`` constant).
+
+        Phases are workgroup-invariant, so per-WG records are stamped against
+        one shared :class:`SymbolicProgram` — O(1) construction per rank in
+        device count, and the shared identity feeds the cohort interpreter's
+        grouping.
+        """
+        cfg = self.cfg
+        shared = self._symbolic_phases(rank, emit=emit)
         return [
             WGProgram(
                 wg=wg,

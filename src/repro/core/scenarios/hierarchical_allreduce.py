@@ -28,10 +28,18 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    Affine,
+    AffineRun,
     EmitOp,
+    EmitRun,
+    LoopEmit,
+    LoopPhase,
+    LoopSpec,
     PhaseSpec,
     Scenario,
+    SymbolicProgram,
     WGProgram,
+    affine_of,
     local_writes,
     reads,
     register_scenario,
@@ -149,6 +157,233 @@ class HierarchicalAllReduceScenario(Scenario):
         )
 
     def programs_for(self, device: int) -> List[WGProgram]:
+        cfg = self.cfg
+        shared = self._symbolic_phases(device)
+        return [
+            WGProgram(
+                wg=wg,
+                cu=wg % cfg.n_cus,
+                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
+                phases=shared,
+            )
+            for wg in range(cfg.workgroups)
+        ]
+
+    def _symbolic_phases(self, device: int) -> SymbolicProgram:
+        """The per-rank stage program, compressed: both ring stages become
+        :class:`LoopSpec`\\ s whose wait address / emit slot are affine in the
+        step index, the leader's handoff barrier and broadcast fan-out become
+        within-phase runs — O(1) objects per rank in devices and nodes.
+        Bit-identity with the flat construction (:meth:`_flat_phases`) is
+        property-tested."""
+        cfg = self.cfg
+        dpn, nodes = self.dpn, self.n_nodes
+        node, local = divmod(device, dpn)
+        leader = node * dpn
+        is_leader = local == 0
+        chunk1 = max(1, self.payload_bytes // dpn)
+        share1, sectors1, cycles1 = self._share(chunk1)
+        segs: List[object] = []
+
+        def _loop_emit(dst: int, slot: Affine, payload: int):
+            return (
+                LoopEmit(
+                    Affine(dst),
+                    slot=slot,
+                    payload_bytes=payload,
+                    data_writes=self.writes_per_step,
+                ),
+            )
+
+        # ---- stage 1: intra-node ring reduce-scatter (ICI tier) ----------
+        if dpn > 1:
+            local_up = node * dpn + (local - 1) % dpn
+            local_down = node * dpn + (local + 1) % dpn
+            segs.append(
+                PhaseSpec(
+                    "hrs_send",
+                    cycles1,
+                    traffic=(
+                        reads(sectors1, cfg.sector_bytes),
+                        xgmi_out(1, share1),
+                    ),
+                    emits=self._emit(local_down, 0, chunk1),
+                )
+            )
+            t_reduce = (
+                reads(2 * sectors1, cfg.sector_bytes),
+                local_writes(1, share1),
+                xgmi_out(1, share1),
+            )
+            t_reduce_last = t_reduce[:2]
+            wait1 = affine_of(
+                lambda k: self.amap.flag_addr(local_up, slot=k), 0, dpn - 1
+            )
+            # steps 0..dpn-3 are a loop (emit flag k+1 downstream); the last
+            # reduce step dpn-2 keeps its shard and emits nothing
+            segs.append(
+                LoopSpec(
+                    dpn - 2,
+                    (
+                        LoopPhase("hrs_wait", wait_addrs=(wait1,)),
+                        LoopPhase(
+                            "hrs_reduce",
+                            cycles1,
+                            traffic=t_reduce,
+                            emits=_loop_emit(local_down, Affine(1, 1), chunk1),
+                        ),
+                    ),
+                )
+            )
+            segs.append(
+                PhaseSpec("hrs_wait", wait_addrs=(wait1.at(dpn - 2),))
+            )
+            segs.append(
+                PhaseSpec("hrs_reduce", cycles1, traffic=t_reduce_last)
+            )
+            # shard handoff: non-leaders push their reduced shard to the
+            # leader; the leader barriers on all dpn-1 handoff flags
+            if is_leader:
+                handoff = affine_of(
+                    lambda l2: self.amap.flag_addr(node * dpn + l2, slot=dpn - 1),
+                    1,
+                    dpn - 1,
+                )
+                segs.append(
+                    LoopPhase(
+                        "hrs_wait",
+                        wait_addrs=(
+                            AffineRun(handoff.at(1), handoff.step, dpn - 1),
+                        ),
+                    )
+                )
+            else:
+                segs.append(
+                    PhaseSpec(
+                        "hrs_handoff",
+                        cycles1,
+                        traffic=(xgmi_out(1, share1),),
+                        emits=self._emit(leader, dpn - 1, chunk1),
+                    )
+                )
+
+        # ---- stage 2: leader ring all-reduce (DCI tier) ------------------
+        if nodes > 1 and is_leader:
+            chunk2 = max(1, self.payload_bytes // nodes)
+            share2, sectors2, cycles2 = self._share(chunk2)
+            up_leader = ((node - 1) % nodes) * dpn
+            down_leader = ((node + 1) % nodes) * dpn
+            base = self.leader_slot_base
+            steps2 = 2 * (nodes - 1)
+            rs2 = nodes - 1
+            segs.append(
+                PhaseSpec(
+                    "hir_send",
+                    cycles2,
+                    traffic=(
+                        reads(sectors2, cfg.sector_bytes),
+                        xgmi_out(1, share2),
+                    ),
+                    emits=self._emit(down_leader, base, chunk2),
+                )
+            )
+            t_red = (
+                reads(2 * sectors2, cfg.sector_bytes),
+                local_writes(1, share2),
+                xgmi_out(1, share2),
+            )
+            t_gat = (
+                reads(sectors2, cfg.sector_bytes),
+                local_writes(1, share2),
+                xgmi_out(1, share2),
+            )
+            t_gat_last = t_gat[:2]
+            wait2 = affine_of(
+                lambda k: self.amap.flag_addr(up_leader, slot=base + k),
+                0,
+                steps2,
+            )
+            wait2_body = LoopPhase("hir_wait", wait_addrs=(wait2,))
+            # emit slot is base + k + 1 for finishing step k
+            slot_out = Affine(base + 1, 1)
+            segs.append(
+                LoopSpec(
+                    rs2,
+                    (
+                        wait2_body,
+                        LoopPhase(
+                            "hir_reduce",
+                            cycles2,
+                            traffic=t_red,
+                            emits=_loop_emit(down_leader, slot_out, chunk2),
+                        ),
+                    ),
+                )
+            )
+            segs.append(
+                LoopSpec(
+                    steps2 - 1 - rs2,
+                    (
+                        wait2_body,
+                        LoopPhase(
+                            "hir_gather",
+                            cycles2,
+                            traffic=t_gat,
+                            emits=_loop_emit(down_leader, slot_out, chunk2),
+                        ),
+                    ),
+                    k0=rs2,
+                )
+            )
+            segs.append(
+                PhaseSpec("hir_wait", wait_addrs=(wait2.at(steps2 - 1),))
+            )
+            segs.append(PhaseSpec("hir_gather", cycles2, traffic=t_gat_last))
+
+        # ---- stage 3: intra-node broadcast (ICI tier) --------------------
+        shareF, sectorsF, cyclesF = self._share(self.payload_bytes)
+        if dpn > 1:
+            if is_leader:
+                segs.append(
+                    LoopPhase(
+                        "hbc_push",
+                        cyclesF,
+                        traffic=(xgmi_out(dpn - 1, shareF),),
+                        emits=(
+                            EmitRun(
+                                dpn - 1,
+                                dst0=node * dpn + 1,
+                                slot0=self.bcast_slot,
+                                payload_bytes=self.payload_bytes,
+                                data_writes=self.writes_per_step,
+                            ),
+                        ),
+                    )
+                )
+            else:
+                segs.append(
+                    PhaseSpec(
+                        "hbc_wait",
+                        wait_addrs=(
+                            self.amap.flag_addr(leader, slot=self.bcast_slot),
+                        ),
+                    )
+                )
+        segs.append(
+            PhaseSpec(
+                "hbc_read",
+                cyclesF,
+                traffic=(
+                    reads(sectorsF, cfg.sector_bytes),
+                    local_writes(1, shareF),
+                ),
+            )
+        )
+        return SymbolicProgram(segs)
+
+    def _flat_phases(self, device: int):
+        """Pre-refactor flat phase construction — the reference oracle for
+        :meth:`_symbolic_phases` (property-tested, never on runtime paths)."""
         cfg = self.cfg
         dpn, nodes = self.dpn, self.n_nodes
         node, local = divmod(device, dpn)
@@ -317,17 +552,7 @@ class HierarchicalAllReduceScenario(Scenario):
                 ),
             )
         )
-
-        shared = tuple(phases)
-        return [
-            WGProgram(
-                wg=wg,
-                cu=wg % cfg.n_cus,
-                dispatch_cycle=(wg // cfg.n_cus) * cfg.dispatch_stagger_cycles,
-                phases=shared,
-            )
-            for wg in range(cfg.workgroups)
-        ]
+        return tuple(phases)
 
     # closed-loop only fallbacks -------------------------------------------
 

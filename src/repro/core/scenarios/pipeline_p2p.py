@@ -23,10 +23,16 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    Affine,
     EmitOp,
+    LoopEmit,
+    LoopPhase,
+    LoopSpec,
     PhaseSpec,
     Scenario,
+    SymbolicProgram,
     WGProgram,
+    affine_of,
     local_writes,
     reads,
     register_scenario,
@@ -127,14 +133,14 @@ class PipelineP2PScenario(Scenario):
                 f"{self.n_microbatches} (amap has {self.amap.flag_slots})"
             )
 
-    def _stamp(self, phases: List[PhaseSpec]) -> List[WGProgram]:
-        """Stamp per-WG program records against one shared phases tuple.
+    def _stamp(self, phases) -> List[WGProgram]:
+        """Stamp per-WG program records against one shared phase program.
 
         Phases are workgroup-invariant — only (wg, cu, dispatch_cycle) vary —
-        so sharing the tuple removes the O(workgroups) construction factor and
-        feeds the cohort interpreter's identity-based grouping."""
+        so sharing the program removes the O(workgroups) construction factor
+        and feeds the cohort interpreter's identity-based grouping."""
         cfg = self.cfg
-        shared = tuple(phases)
+        shared = phases if isinstance(phases, SymbolicProgram) else tuple(phases)
         return [
             WGProgram(
                 wg=wg,
@@ -145,9 +151,18 @@ class PipelineP2PScenario(Scenario):
             for wg in range(cfg.workgroups)
         ]
 
-    def programs(self) -> List[WGProgram]:
+    def _microbatch_flag(self) -> Affine:
+        """Per-microbatch wait address, affine in the microbatch index."""
+        return affine_of(
+            lambda m: self.amap.flag_addr(self.upstream, slot=m),
+            0,
+            self.n_microbatches,
+        )
+
+    def _flat_open_phases(self):
+        """Pre-refactor flat open-loop construction — the reference oracle
+        for :meth:`_symbolic_open_phases` (property-tested)."""
         cfg = self.cfg
-        self._check_slots()
         share, sectors, io_cycles, fwd_cycles = self._shares()
         phases: List[PhaseSpec] = []
         for m in range(self.n_microbatches):
@@ -174,7 +189,42 @@ class PipelineP2PScenario(Scenario):
                     traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
                 )
             )
-        return self._stamp(phases)
+        return tuple(phases)
+
+    def _symbolic_open_phases(self) -> SymbolicProgram:
+        """One :class:`LoopSpec` over microbatches — O(1) objects in
+        ``n_microbatches``."""
+        cfg = self.cfg
+        share, sectors, io_cycles, fwd_cycles = self._shares()
+        return SymbolicProgram(
+            (
+                LoopSpec(
+                    self.n_microbatches,
+                    (
+                        LoopPhase(
+                            "wait_flags", wait_addrs=(self._microbatch_flag(),)
+                        ),
+                        LoopPhase(
+                            "fwd_compute",
+                            fwd_cycles,
+                            traffic=(
+                                reads(sectors, cfg.sector_bytes),
+                                local_writes(1, share),
+                            ),
+                        ),
+                        LoopPhase(
+                            "p2p_send",
+                            io_cycles,
+                            traffic=(xgmi_out(1, share), xgmi_out(1, 8)),
+                        ),
+                    ),
+                ),
+            )
+        )
+
+    def programs(self) -> List[WGProgram]:
+        self._check_slots()
+        return self._stamp(self._symbolic_open_phases())
 
     def programs_for(self, device: int) -> List[WGProgram]:
         """Closed loop: device ``r`` is pipeline stage ``r`` (0 = source).
@@ -188,8 +238,13 @@ class PipelineP2PScenario(Scenario):
         """
         if not self.closed_loop:
             return super().programs_for(device)
-        cfg = self.cfg
         self._check_slots()
+        return self._stamp(self._symbolic_closed_phases(device))
+
+    def _flat_closed_phases(self, device: int):
+        """Pre-refactor flat closed-loop construction — the reference oracle
+        for :meth:`_symbolic_closed_phases` (property-tested)."""
+        cfg = self.cfg
         share, sectors, io_cycles, fwd_cycles = self._shares()
         n = cfg.n_devices
         first = device == 0
@@ -240,7 +295,58 @@ class PipelineP2PScenario(Scenario):
                         ),
                     )
                 )
-        return self._stamp(phases)
+        return tuple(phases)
+
+    def _symbolic_closed_phases(self, device: int) -> SymbolicProgram:
+        """One :class:`LoopSpec` over microbatches, body shaped by the
+        stage's position (source stages free-run, the final stage keeps its
+        results local) — O(1) objects in ``n_microbatches``."""
+        cfg = self.cfg
+        share, sectors, io_cycles, fwd_cycles = self._shares()
+        n = cfg.n_devices
+        first = device == 0
+        last = device == n - 1
+        body: List[LoopPhase] = []
+        if not first:
+            wait_aff = affine_of(
+                lambda m: self.amap.flag_addr(device - 1, slot=m),
+                0,
+                self.n_microbatches,
+            )
+            body.append(LoopPhase("wait_flags", wait_addrs=(wait_aff,)))
+        body.append(
+            LoopPhase(
+                "fwd_compute",
+                fwd_cycles,
+                traffic=(
+                    reads(sectors, cfg.sector_bytes),
+                    local_writes(1, share),
+                ),
+            )
+        )
+        if last:
+            body.append(
+                LoopPhase("p2p_send", io_cycles, traffic=(local_writes(1, share),))
+            )
+        else:
+            body.append(
+                LoopPhase(
+                    "p2p_send",
+                    io_cycles,
+                    traffic=(xgmi_out(1, share),),
+                    emits=(
+                        LoopEmit(
+                            Affine(device + 1),
+                            slot=Affine(0, 1),
+                            payload_bytes=self.activation_bytes,
+                            data_writes=self.writes_per_microbatch,
+                        ),
+                    ),
+                )
+            )
+        return SymbolicProgram(
+            (LoopSpec(self.n_microbatches, tuple(body)),)
+        )
 
     def traces(self) -> TraceBundle:
         cfg = self.cfg

@@ -31,10 +31,16 @@ from ..config import SimConfig
 from ..events import TraceBundle, register_phase
 from ..memory import AddressMap
 from ..scenario import (
+    Affine,
     EmitOp,
+    LoopEmit,
+    LoopPhase,
+    LoopSpec,
     PhaseSpec,
     Scenario,
+    SymbolicProgram,
     WGProgram,
+    affine_of,
     local_writes,
     reads,
     register_scenario,
@@ -124,9 +130,10 @@ class RingAllReduceScenario(Scenario):
         cycles = max(1, math.ceil(sectors / cfg.wg_sector_throughput))
         return share, sectors, cycles
 
-    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
-        """Per-step ring program of one rank; with ``emit`` the step-k flag is
-        pushed downstream when (the last WG of) step k completes."""
+    def _flat_phases(self, rank: int, *, emit: bool):
+        """Pre-refactor flat phase construction — O(steps) PhaseSpecs.  Kept
+        as the reference oracle for ``SymbolicProgram.expand()`` equivalence
+        (property-tested); runtime paths use :meth:`_symbolic_phases`."""
         cfg = self.cfg
         n = cfg.n_devices
         share, sectors, cycles = self._wg_share()
@@ -147,12 +154,6 @@ class RingAllReduceScenario(Scenario):
                 ),
             )
 
-        # The phase list is identical for every workgroup of the rank — only
-        # (wg, cu, dispatch_cycle) vary — so build ONE shared phases tuple and
-        # stamp per-WG program records against it.  This collapses program
-        # construction from O(workgroups x steps) PhaseSpec allocations per
-        # rank to O(steps), and the shared tuple identity lets the cohort
-        # interpreter group workgroups without comparing phase lists.
         phases: List[PhaseSpec] = [
             # step 0: push our own chunk downstream before waiting
             PhaseSpec(
@@ -186,7 +187,104 @@ class RingAllReduceScenario(Scenario):
                     emits=() if last else flag_out(s + 1),
                 )
             )
-        shared = tuple(phases)
+        return tuple(phases)
+
+    def _symbolic_phases(self, rank: int, *, emit: bool) -> SymbolicProgram:
+        """The same program as :meth:`_flat_phases`, compressed: a literal
+        send, one :class:`LoopSpec` per ring stage (reduce-scatter /
+        all-gather) whose wait address and emit slot are affine in the step
+        index k, and a literal tail — O(1) objects per rank in step count."""
+        cfg = self.cfg
+        n = cfg.n_devices
+        share, sectors, cycles = self._wg_share()
+        chunk = max(1, self.payload_bytes // n)
+        rs_steps = n - 1
+        upstream = (rank - 1) % n
+        downstream = (rank + 1) % n
+
+        def loop_out(slot: Affine):
+            if not emit:
+                return ()
+            return (
+                LoopEmit(
+                    Affine(downstream),
+                    slot=slot,
+                    payload_bytes=chunk,
+                    data_writes=self.writes_per_step,
+                ),
+            )
+
+        # step-k wait address: one flag slot per ring step, the upstream
+        # writer's column — derived from the AddressMap rather than assuming
+        # its layout (affine_of verifies affinity over the full step range).
+        wait_aff = affine_of(
+            lambda k: self.amap.flag_addr(upstream, slot=k), 0, self.steps
+        )
+        wait_body = LoopPhase("wait_flags", wait_addrs=(wait_aff,))
+        step_out = loop_out(Affine(1, 1))  # finishing step k emits flag k+1
+        segments = [
+            PhaseSpec(
+                "ring_send",
+                cycles,
+                traffic=(reads(sectors, cfg.sector_bytes), xgmi_out(1, share)),
+                emits=tuple(e.at(0) for e in loop_out(Affine(0))),
+            ),
+            LoopSpec(
+                rs_steps,
+                (
+                    wait_body,
+                    LoopPhase(
+                        "ring_reduce",
+                        cycles,
+                        traffic=(
+                            reads(sectors * 2, cfg.sector_bytes),
+                            local_writes(1, share),
+                            xgmi_out(1, share),
+                        ),
+                        emits=step_out,
+                    ),
+                ),
+            ),
+            LoopSpec(
+                self.steps - 1 - rs_steps,
+                (
+                    wait_body,
+                    LoopPhase(
+                        "ring_gather",
+                        cycles,
+                        traffic=(
+                            reads(sectors, cfg.sector_bytes),
+                            local_writes(1, share),
+                            xgmi_out(1, share),
+                        ),
+                        emits=step_out,
+                    ),
+                ),
+                k0=rs_steps,
+            ),
+            PhaseSpec(
+                "wait_flags", wait_addrs=(wait_aff.at(self.steps - 1),)
+            ),
+            PhaseSpec(
+                "ring_gather",
+                cycles,
+                traffic=(reads(sectors, cfg.sector_bytes), local_writes(1, share)),
+            ),
+        ]
+        return SymbolicProgram(segments)
+
+    def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
+        """Per-step ring program of one rank; with ``emit`` the step-k flag is
+        pushed downstream when (the last WG of) step k completes.
+
+        The phase list is identical for every workgroup of the rank — only
+        (wg, cu, dispatch_cycle) vary — so build ONE shared
+        :class:`SymbolicProgram` and stamp per-WG program records against it.
+        Construction is O(1) in step count; the shared identity lets the
+        cohort interpreter group workgroups without comparing phase lists.
+        """
+        cfg = self.cfg
+        shared = self._symbolic_phases(rank, emit=emit)
         return [
             WGProgram(
                 wg=wg,

@@ -57,9 +57,48 @@ from .config import SimConfig, SyncPolicy
 from .events import RegisteredWrite, Segment
 from .memory import DirectoryMemory
 from .monitor import MonitorLog
-from .scenario import PhaseSpec, Scenario, WGProgram
+from .scenario import PhaseSpec, Scenario, WGProgram, as_symbolic
 
 __all__ = ["TargetDevice", "EidolaDeadlock"]
+
+
+class _WatchSet:
+    """Flag addresses some program may wait on, as literals + arithmetic runs.
+
+    Symbolic programs summarize their wait addresses as ``(start, stride,
+    count)`` runs in O(#segments) (:meth:`SymbolicProgram.wait_runs`), so the
+    watch set never materializes O(steps) addresses; membership stays O(1) in
+    the literal set plus O(#runs) run checks (a handful per program shape).
+    """
+
+    __slots__ = ("literal", "runs")
+
+    def __init__(self) -> None:
+        self.literal: Set[int] = set()
+        self.runs: Set[Tuple[int, int, int]] = set()
+
+    def add_program(self, phases) -> None:
+        sp = as_symbolic(phases)
+        if sp is not None:
+            lits, runs = sp.wait_runs()
+            self.literal.update(lits)
+            self.runs.update(runs)
+            return
+        for ph in phases:
+            if ph.wait_addrs:
+                self.literal.update(ph.wait_addrs)
+
+    def __contains__(self, addr: int) -> bool:
+        if addr in self.literal:
+            return True
+        for start, stride, count in self.runs:
+            off = addr - start
+            if stride:
+                if off >= 0 and off % stride == 0 and off // stride < count:
+                    return True
+            elif off == 0:
+                return True
+        return False
 
 
 class EidolaDeadlock(RuntimeError):
@@ -227,51 +266,25 @@ class TargetDevice:
         self._by_wg: Dict[int, int] = {
             wg: c.idx for c in self.cohorts for wg in c.members
         }
-        # Per-spec unit traffic deltas, keyed by spec identity (phase tuples
-        # are shared across programs, so this is O(distinct specs)).  A phase
+        # Per-spec unit traffic deltas, keyed by spec identity and filled
+        # *lazily* by _tdelta_for (symbolic programs materialize phases on
+        # demand; an up-front walk would re-expand O(steps) specs).  A phase
         # completion then costs six integer adds instead of re-walking the
         # TrafficOp list; the arithmetic is identical to op.apply() per member.
-        # Cohorts overwhelmingly share one phases tuple (scenarios stamp every
-        # wg of a rank against the same tuple), so walk each distinct tuple
-        # once — at pod scale the redundant per-cohort walks dominated
-        # construction.
+        # SymbolicProgram memoizes materialization, so spec ids are stable and
+        # stay alive as long as the program does.
         self._tdelta: Dict[int, Optional[Tuple[int, int, int, int, int, int]]] = {}
+
+        # every flag address some program may wait on, as literals plus
+        # (start, stride, count) runs (one walk per distinct phases object)
+        self._watched = _WatchSet()
         seen_phase_tuples: Set[int] = set()
         for c in self.cohorts:
             pid = id(c.phases)
             if pid in seen_phase_tuples:
                 continue
             seen_phase_tuples.add(pid)
-            for spec in c.phases:
-                key = id(spec)
-                if key in self._tdelta:
-                    continue
-                if not spec.traffic:
-                    self._tdelta[key] = None
-                    continue
-                nonflag = rbytes = local = wbytes = xout = xbytes = 0
-                for op in spec.traffic:
-                    if op.kind == "reads":
-                        nonflag += op.n
-                        rbytes += op.n * op.bytes_each
-                    elif op.kind == "local_writes":
-                        local += op.n
-                        wbytes += op.n * op.bytes_each
-                    else:  # xgmi_out
-                        xout += op.n
-                        xbytes += op.n * op.bytes_each
-                self._tdelta[key] = (nonflag, rbytes, local, wbytes, xout, xbytes)
-
-        # every flag address some program may wait on (one walk per distinct
-        # phases tuple — wait_addresses() re-derives from the phases alone)
-        self._watched: Set[int] = set()
-        seen_phase_tuples.clear()
-        for c in self.cohorts:
-            pid = id(c.phases)
-            if pid in seen_phase_tuples:
-                continue
-            seen_phase_tuples.add(pid)
-            self._watched.update(c.program.wait_addresses())
+            self._watched.add_program(c.phases)
         self.flag_set_cycle: Dict[int, int] = {}
         # spin mode: flag addr -> set of blocked cohort indexes
         self._spin_waiters: Dict[int, Set[int]] = {}
@@ -329,12 +342,39 @@ class TargetDevice:
     # phase completion accounting
     # ------------------------------------------------------------------
 
+    def _tdelta_for(
+        self, spec: PhaseSpec
+    ) -> Optional[Tuple[int, int, int, int, int, int]]:
+        """Unit traffic delta of ``spec``, memoized by spec identity."""
+        key = id(spec)
+        try:
+            return self._tdelta[key]
+        except KeyError:
+            pass
+        if not spec.traffic:
+            self._tdelta[key] = None
+            return None
+        nonflag = rbytes = local = wbytes = xout = xbytes = 0
+        for op in spec.traffic:
+            if op.kind == "reads":
+                nonflag += op.n
+                rbytes += op.n * op.bytes_each
+            elif op.kind == "local_writes":
+                local += op.n
+                wbytes += op.n * op.bytes_each
+            else:  # xgmi_out
+                xout += op.n
+                xbytes += op.n * op.bytes_each
+        d = (nonflag, rbytes, local, wbytes, xout, xbytes)
+        self._tdelta[key] = d
+        return d
+
     def _complete_phase(self, c: _Cohort, spec: PhaseSpec, start: int, end: int) -> None:
         # timed phases always get a timeline segment (even zero-length, as the
         # seed's state machine did); wait phases only when time actually passed
         if end > start or spec.wait_addrs is None:
             c.segments.append((spec.name, start, end))
-        d = self._tdelta[id(spec)]
+        d = self._tdelta_for(spec)
         if d is not None:
             # closed-form cohort accounting: identical arithmetic to
             # TrafficOp.apply(memory, times=count), precomputed per spec

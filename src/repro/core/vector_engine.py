@@ -12,6 +12,11 @@ simulated cycles and sub-linear in everything else.
 A jax.lax.scan variant of the spin-read closed form is provided for the
 pod-scale replay path (``repro.core.predictor``), demonstrating the engine
 itself can run on the accelerator.
+
+This engine is replay-only and gemv-specific; the same closed forms applied
+to the N-device closed loop live in ``repro.core.cohort_timeline`` (lanes)
+and ``repro.core.lockstep`` (all ranks × all loop steps of a symbolic
+program, advanced in bulk without unrolling).
 """
 
 from __future__ import annotations

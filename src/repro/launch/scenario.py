@@ -299,6 +299,19 @@ def main(argv=None) -> int:
         print(report.summary())
         if report.closed_loop:
             print(report.device_summary())
+            ps = report.meta.get("program_stats")
+            if ps:
+                impl = ("lockstep" if ps.get("lockstep")
+                        else report.meta.get("engine_impl", "?"))
+                print(
+                    f"programs: {ps['symbolic_programs']} symbolic / "
+                    f"{ps['flat_programs']} flat | "
+                    f"{ps['program_phases']} phases "
+                    f"({ps['materialized_phases']} materialized, "
+                    f"{ps['segments']} segments) | "
+                    f"built in {ps['construct_wall_s'] * 1e3:.1f} ms | "
+                    f"advanced by {impl}"
+                )
     return 0
 
 

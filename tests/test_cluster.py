@@ -455,12 +455,12 @@ def test_precomputed_traffic_deltas_mirror_trafficop_apply():
     cfg = FAST.with_(engine=EngineKind.EVENT)
     sc = get_scenario("ring_allreduce")(cfg, closed_loop=True)
     dev = Cluster(cfg, sc).nodes[0].target
-    specs_by_id = {
-        id(spec): spec for c in dev.cohorts for spec in c.phases
-    }
+    # deltas are computed lazily on first use; drive the memoizing accessor
+    specs = {id(spec): spec for c in dev.cohorts for spec in c.phases}
     checked = 0
-    for key, delta in dev._tdelta.items():
-        spec = specs_by_id[key]
+    for spec in specs.values():
+        delta = dev._tdelta_for(spec)
+        assert dev._tdelta_for(spec) is delta or delta is None
         if delta is None:
             assert not spec.traffic
             continue

@@ -56,6 +56,17 @@ def test_architecture_md_verify_example_executes():
     exec(compile(verify[0], "ARCHITECTURE.md:verify_scenario", "exec"), {})
 
 
+def test_architecture_md_symbolic_example_executes():
+    # the 1024-device flat ring snippet: symbolic programs + the lockstep
+    # solver finish in seconds what used to be minutes-scale; a failure here
+    # means the doc lies about the compressed-IR path
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    sym = [b for b in blocks if "SymbolicProgram" in b]
+    assert len(sym) == 1, "expected exactly one symbolic-program code block"
+    exec(compile(sym[0], "ARCHITECTURE.md:symbolic_programs", "exec"), {})
+
+
 @pytest.mark.slow
 def test_architecture_md_pod_scale_example_executes():
     # the 1024-device timeline-engine snippet runs as written (tens of

@@ -235,7 +235,7 @@ def test_peer_delay_perturb_inflates_wait_phase():
     slow = run_gemv_allreduce(
         cfg, 0.0, perturb=PeerDelayPerturb({2: 30_000.0, 3: 30_000.0})
     )
-    from repro.core.timeline import phase_totals
+    from repro.core.trace_render import phase_totals
 
     wait_ideal = phase_totals(ideal.segments).get("wait_flags", 0.0)
     wait_slow = phase_totals(slow.segments).get("wait_flags", 0.0)

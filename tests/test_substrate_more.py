@@ -16,7 +16,7 @@ from repro.core.hlo_capture import (
 )
 from repro.core.predictor import predict_step, roofline
 from repro.core.topology import Topology, V5E
-from repro.core.timeline import ascii_timeline, phase_totals, to_chrome_trace, to_csv
+from repro.core.trace_render import ascii_timeline, phase_totals, to_chrome_trace, to_csv
 from repro.core import SimConfig, SyncPolicy, EngineKind, run_gemv_allreduce
 from repro.optim import AdamWConfig, adamw_init, adamw_step, cosine_lr
 

@@ -1,0 +1,349 @@
+"""Symbolic program IR: expand() oracles, engine bit-identity, loop space.
+
+Three layers of evidence that the compressed :class:`SymbolicProgram` path
+is a pure representation change:
+
+* seeded-random **expansion equality** — every scenario keeps its
+  pre-refactor flat construction as an oracle (``_flat_phases`` & friends),
+  and ``SymbolicProgram.expand()`` must reproduce it element-for-element
+  for random device counts / payloads / devices_per_node;
+* **engine bit-identity** — symbolic programs must produce the same traffic
+  counters through the event interpreter, the timeline engine, and the
+  lockstep bulk solver, across every fabric preset;
+* **loop-space verification** — ``verify_symbolic`` must agree with the
+  materialized per-step verifier at small scale and stay O(segments) at
+  pod scale.
+
+When ``hypothesis`` is installed an extra property test widens the random
+coverage; the seeded ``random.Random`` tests below always run.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.config import EngineKind, SimConfig
+from repro.core.scenario import SymbolicProgram, as_symbolic, simulate
+from repro.core.scenarios.all_to_all import AllToAllScenario
+from repro.core.scenarios.hierarchical_allreduce import (
+    HierarchicalAllReduceScenario,
+)
+from repro.core.scenarios.pipeline_p2p import PipelineP2PScenario
+from repro.core.scenarios.ring_allreduce import RingAllReduceScenario
+
+SEED = 0xE1D01A
+
+# counters that must match bit-for-bit across engine implementations
+_KEYS = (
+    "flag_reads",
+    "nonflag_reads",
+    "local_writes",
+    "xgmi_writes_in",
+    "xgmi_writes_out",
+    "xgmi_bytes_in",
+    "xgmi_bytes_out",
+    "read_bytes",
+    "write_bytes",
+)
+
+
+def _cfg(n, wgs=8):
+    return SimConfig(engine=EngineKind.EVENT, workgroups=wgs).with_devices(n)
+
+
+def _assert_expansion(symbolic, flat, where):
+    assert isinstance(symbolic, SymbolicProgram), where
+    expanded = symbolic.expand()
+    assert len(expanded) == len(flat), where
+    for i, (a, b) in enumerate(zip(expanded, flat)):
+        assert a == b, f"{where} phase {i}: {a!r} != {b!r}"
+    # random access must agree with expansion (bisect + memo path)
+    if flat:
+        rng = random.Random(SEED ^ len(flat))
+        for i in [0, len(flat) - 1] + rng.sample(
+            range(len(flat)), min(8, len(flat))
+        ):
+            assert symbolic[i] == flat[i], f"{where} [{i}]"
+
+
+def _dpn_choices(rng, n):
+    divisors = [d for d in (2, 4, 8) if n % d == 0 and d < n]
+    return rng.choice(divisors) if divisors else None
+
+
+def test_ring_allreduce_expand_matches_flat():
+    rng = random.Random(SEED)
+    for _ in range(12):
+        n = rng.choice([2, 3, 4, 5, 7, 8, 12, 16, 24, 33])
+        sc = RingAllReduceScenario(
+            _cfg(n),
+            payload_bytes=rng.choice([4096, 1 << 16, 1 << 20]),
+            writes_per_step=rng.randint(0, 6),
+            closed_loop=True,
+            devices_per_node=_dpn_choices(rng, n),
+        )
+        for rank in range(n):
+            for emit in (False, True):
+                _assert_expansion(
+                    sc._symbolic_phases(rank, emit=emit),
+                    sc._flat_phases(rank, emit=emit),
+                    f"ring n={n} rank={rank} emit={emit}",
+                )
+
+
+def test_all_to_all_expand_matches_flat():
+    rng = random.Random(SEED + 1)
+    for _ in range(12):
+        n = rng.choice([2, 3, 4, 6, 8, 9, 16, 17, 32])
+        sc = AllToAllScenario(
+            _cfg(n),
+            tokens_per_device=rng.choice([256, 1024, 4096]),
+            token_bytes=rng.choice([128, 512]),
+            writes_per_peer=rng.randint(0, 8),
+            closed_loop=True,
+            devices_per_node=_dpn_choices(rng, n),
+        )
+        for rank in range(n):
+            for emit in (False, True):
+                _assert_expansion(
+                    sc._symbolic_phases(rank, emit=emit),
+                    sc._flat_phases(rank, emit=emit),
+                    f"a2a n={n} rank={rank} emit={emit}",
+                )
+
+
+def test_hierarchical_expand_matches_flat():
+    rng = random.Random(SEED + 2)
+    for _ in range(8):
+        dpn = rng.choice([2, 4])
+        n = dpn * rng.choice([2, 3, 4, 6])
+        sc = HierarchicalAllReduceScenario(
+            _cfg(n),
+            payload_bytes=rng.choice([4096, 1 << 18, 1 << 20]),
+            writes_per_step=rng.randint(0, 5),
+            devices_per_node=dpn,
+        )
+        for dev in range(n):
+            _assert_expansion(
+                sc._symbolic_phases(dev),
+                sc._flat_phases(dev),
+                f"hier n={n} dpn={dpn} dev={dev}",
+            )
+
+
+def test_pipeline_expand_matches_flat():
+    rng = random.Random(SEED + 3)
+    for _ in range(8):
+        n = rng.choice([2, 3, 4, 6, 8])
+        kw = dict(
+            n_microbatches=rng.choice([1, 2, 5, 8, 16]),
+            activation_bytes=rng.choice([1 << 14, 1 << 19]),
+        )
+        open_sc = PipelineP2PScenario(_cfg(n), **kw)
+        _assert_expansion(
+            open_sc._symbolic_open_phases(),
+            open_sc._flat_open_phases(),
+            f"pipe-open n={n} {kw}",
+        )
+        closed = PipelineP2PScenario(_cfg(n), closed_loop=True, **kw)
+        for dev in range(n):
+            _assert_expansion(
+                closed._symbolic_closed_phases(dev),
+                closed._flat_closed_phases(dev),
+                f"pipe-closed n={n} dev={dev} {kw}",
+            )
+
+
+def test_scenarios_stamp_symbolic_programs():
+    # the runtime path must actually carry the compressed IR, not a copy of
+    # the flat oracle
+    n = 8
+    for sc in (
+        RingAllReduceScenario(_cfg(n), closed_loop=True),
+        AllToAllScenario(_cfg(n), closed_loop=True),
+        HierarchicalAllReduceScenario(_cfg(n), devices_per_node=2),
+        PipelineP2PScenario(_cfg(n), closed_loop=True),
+    ):
+        progs = sc.programs_for(0)
+        assert as_symbolic(progs[0].phases) is not None, type(sc).__name__
+
+
+def _counters(r):
+    out = {k: r.traffic.get(k) for k in _KEYS}
+    out["sim_cycles"] = r.sim_cycles
+    out["per_device"] = r.per_device
+    out["wtt"] = (r.wtt_registered, r.wtt_enacted)
+    return out
+
+
+@pytest.mark.parametrize("name", ["ring_allreduce", "all_to_all"])
+@pytest.mark.parametrize(
+    "fabric", [None, "ring", "fat_tree", "rail_optimized", "torus2d",
+               "two_tier"]
+)
+def test_engine_bit_identity_on_symbolic_programs(name, fabric):
+    kw = dict(devices=8, closed_loop=True, collect_segments=False)
+    if fabric is not None:
+        kw.update(fabric=fabric, devices_per_node=2)
+    cfg = _cfg(8)
+    event = simulate(name, cfg, timeline=False, **kw)
+    timeline = simulate(name, cfg, timeline=True, **kw)
+    assert _counters(event) == _counters(timeline), (name, fabric)
+    cycle = simulate(
+        name, cfg.with_(engine=EngineKind.CYCLE), timeline=False, **kw
+    )
+    # cycle vs event agree on traffic volume (scheduling differs by design)
+    for k in ("flag_reads", "nonflag_reads", "xgmi_writes_in",
+              "xgmi_bytes_in"):
+        assert cycle.traffic.get(k) == event.traffic.get(k), (name, fabric, k)
+
+
+@pytest.mark.parametrize("name", ["ring_allreduce", "all_to_all"])
+@pytest.mark.parametrize("n", [2, 3, 4, 16, 17])
+def test_lockstep_bit_identity(name, n):
+    kw = dict(devices=n, closed_loop=True, collect_segments=False)
+    cfg = _cfg(n, wgs=16)
+    fast = simulate(name, cfg, lockstep=True, **kw)
+    slow = simulate(name, cfg, lockstep=False, **kw)
+    assert fast.meta["program_stats"]["lockstep"] is True
+    assert slow.meta["program_stats"]["lockstep"] is False
+    assert _counters(fast) == _counters(slow), (name, n)
+    fint = {k: v for k, v in fast.meta["fabric"].items() if isinstance(v, int)}
+    sint = {k: v for k, v in slow.meta["fabric"].items() if isinstance(v, int)}
+    assert fint == sint, (name, n)
+
+
+def test_lockstep_requires_eligible_shape():
+    # non-rank-uniform programs cannot use the bulk solver
+    with pytest.raises(ValueError, match="lockstep"):
+        simulate(
+            "hierarchical_allreduce", _cfg(8), lockstep=True, devices=8,
+            devices_per_node=2, closed_loop=True, collect_segments=False,
+        )
+    # ...but fall back to the generic timeline engine when not forced
+    r = simulate(
+        "hierarchical_allreduce", _cfg(8), devices=8, devices_per_node=2,
+        closed_loop=True, collect_segments=False,
+    )
+    assert r.meta["engine_impl"] == "timeline"
+    assert r.meta["program_stats"]["lockstep"] is False
+
+
+def test_lockstep_rejects_open_loop():
+    with pytest.raises(ValueError, match="closed-loop"):
+        simulate("ring_allreduce", _cfg(4), lockstep=True)
+
+
+def test_program_stats_reported():
+    r = simulate(
+        "ring_allreduce", _cfg(8), devices=8, closed_loop=True,
+        collect_segments=False,
+    )
+    ps = r.meta["program_stats"]
+    assert ps["symbolic_programs"] > 0
+    assert ps["flat_programs"] == 0
+    assert ps["program_phases"] > ps["segments"]
+    assert ps["materialized_phases"] <= ps["program_phases"]
+    assert ps["construct_wall_s"] >= 0.0
+
+
+def test_lockstep_never_materializes():
+    r = simulate(
+        "ring_allreduce", _cfg(64), devices=64, closed_loop=True,
+        collect_segments=False, lockstep=True,
+    )
+    assert r.meta["program_stats"]["materialized_phases"] == 0
+
+
+def test_verify_symbolic_agrees_with_materialized():
+    from repro.analysis.verify import verify_scenario, verify_symbolic
+
+    for name in ("ring_allreduce", "all_to_all"):
+        vs = verify_symbolic(name, devices=8, closed_loop=True)
+        vm = verify_scenario(name, devices=8, closed_loop=True)
+        assert not [f for f in vs.findings if f.kind == "symbolic-shape"]
+        assert vs.ok == vm.ok, name
+
+
+def test_verify_symbolic_pod_scale_is_loop_space():
+    from repro.analysis.verify import verify_symbolic
+
+    # materializing 4096 devices would need O(devices^2) ~ 16M step nodes;
+    # loop space stays O(segments x devices) and finishes fast
+    for name in ("ring_allreduce", "all_to_all"):
+        v = verify_symbolic(name, devices=4096, closed_loop=True)
+        assert v.ok, (name, v.findings)
+
+
+def test_verify_symbolic_shape_skip_is_declared():
+    from repro.analysis.verify import verify_symbolic
+
+    v = verify_symbolic(
+        "hierarchical_allreduce", devices=8, devices_per_node=2,
+        closed_loop=True,
+    )
+    assert v.ok
+    assert [f for f in v.findings if f.kind == "symbolic-shape"]
+
+
+def test_verify_symbolic_catches_unmatched_wait():
+    from repro.analysis.verify import verify_symbolic
+    from repro.core.scenario import Affine, LoopPhase, LoopSpec
+
+    class BrokenRing(RingAllReduceScenario):
+        def _symbolic_phases(self, rank, *, emit):
+            n = self.cfg.n_devices
+            # wait on the *downstream* rank's flag column: a well-formed
+            # affine family that no emission ever writes into this rank's
+            # memory (the upstream neighbor writes its own column)
+            bogus = LoopSpec(
+                self.steps,
+                (
+                    LoopPhase(
+                        "wait-missing",
+                        wait_addrs=(
+                            Affine(
+                                self.amap.flag_addr((rank + 1) % n, 0),
+                                self.amap.flag_stride * n,
+                            ),
+                        ),
+                    ),
+                ),
+            )
+            base = super()._symbolic_phases(rank, emit=emit)
+            return SymbolicProgram(tuple(base.segments) + (bogus,))
+
+    sc = BrokenRing(_cfg(4), closed_loop=True)
+    v = verify_symbolic(sc)
+    assert not v.ok
+    assert any(f.kind == "unmatched-wait" for f in v.findings)
+
+
+# -- hypothesis widening (optional dependency) ------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    pass
+else:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=24),
+        payload=st.integers(min_value=1, max_value=1 << 21),
+        writes=st.integers(min_value=0, max_value=8),
+    )
+    def test_hypothesis_ring_expand_matches_flat(n, payload, writes):
+        sc = RingAllReduceScenario(
+            _cfg(n), payload_bytes=payload, writes_per_step=writes,
+            closed_loop=True,
+        )
+        for rank in (0, n // 2, n - 1):
+            _assert_expansion(
+                sc._symbolic_phases(rank, emit=True),
+                sc._flat_phases(rank, emit=True),
+                f"hyp ring n={n} rank={rank}",
+            )

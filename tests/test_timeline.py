@@ -123,10 +123,22 @@ def test_timeline_bit_identical_tiered(name, fabric):
 def test_timeline_breakdown_reported():
     r = simulate(
         "ring_allreduce", FAST, devices=4, closed_loop=True, timeline=True,
-        collect_segments=False,
+        lockstep=False, collect_segments=False,
     )
     bd = r.meta["wall_breakdown"]
     assert set(bd) == {"interpreter_s", "fabric_s", "wtt_s", "other_s"}
+    assert all(isinstance(v, float) and v >= 0.0 for v in bd.values())
+    assert sum(bd.values()) <= r.wall_time_s + 1e-6
+
+
+def test_lockstep_breakdown_reported():
+    r = simulate(
+        "ring_allreduce", FAST, devices=4, closed_loop=True, lockstep=True,
+        collect_segments=False,
+    )
+    assert r.meta["program_stats"]["lockstep"] is True
+    bd = r.meta["wall_breakdown"]
+    assert set(bd) == {"compile_s", "solve_s", "writeback_s"}
     assert all(isinstance(v, float) and v >= 0.0 for v in bd.values())
     assert sum(bd.values()) <= r.wall_time_s + 1e-6
 
