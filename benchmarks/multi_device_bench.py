@@ -25,15 +25,22 @@ graph-based presets can never silently fall out of coverage.
 Pod scale (1024+ devices) rides the timeline engine
 (``repro.core.cohort_timeline``, auto-selected; rows still record
 ``engine="event"`` — same semantics — with ``engine_impl`` naming the
-implementation).  The flat ring_allreduce / all_to_all pod rows go further:
-their symbolic programs (``LoopSpec`` segments) engage the lockstep bulk
-solver (``repro.core.lockstep``), giving real 1024/4096-device rows in
-seconds where the unrolled programs used to take minutes.  A skip policy
-keeps the remaining sweep seconds-per-row (tiered ring/all_to_all and the
-flat hierarchical/pipeline shapes at >= 1024), each with a printed reason,
-never silently.  Rows carry a ``wall_breakdown`` section-timing dict when
-the timeline engine or lockstep solver ran; like ``wall_time_s`` it is
-measurement metadata, not simulation physics, so ``--check`` ignores it.
+implementation).  Symbolic programs go further: the flat ring/all_to_all
+pod rows engage the flat lockstep solver (``repro.core.lockstep``), and
+the tiered ring/all_to_all pod rows — on two_tier, fat_tree, and
+rail_optimized alike — engage the tiered solver
+(``repro.core.lockstep_tiered``).  Tiered hierarchical pod rows stay on
+the timeline: the scenario's legacy flag pool overruns into the
+partial-tile region at 256 nodes, so data-marker writes alias high flag
+slots and the solver declines rather than mis-model the stale-flag
+visibility (``lockstep_reason`` carries the exact blame).  Either way
+every pod-scale bench row is a real 1024/4096-device run.  The one
+exclusion left is the flat single-tier hierarchical shape (genuinely
+program-size-bound: O(devices^2) phase sites), printed with its reason,
+never silent.  Rows carry a
+``wall_breakdown`` section-timing dict when the timeline engine or
+lockstep solver ran; like ``wall_time_s`` it is measurement metadata, not
+simulation physics, so ``--check`` ignores it.
 
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
      [--quick] [--devices 4,8,...] [--scenarios a,b] [--repeats N]
@@ -44,6 +51,7 @@ Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import sys
@@ -87,36 +95,37 @@ def tiered_dpn(devices: int) -> int:
 def pod_skip_reason(name: str, devices: int, dpn) -> str | None:
     """Why a (scenario, devices, shape) combination is excluded from the
     sweep, or None to run it.  Pod-scale coverage is deliberate, not silent:
-    every exclusion prints its reason.
+    every exclusion prints its reason, and only genuinely
+    program-size-bound shapes are excluded.
 
-    * flat ring_allreduce / all_to_all at >= 1024 devices RUN: their
-      symbolic programs (LoopSpec segments, O(1) construction per rank)
-      ride the lockstep bulk solver, which advances all ranks x all loop
-      steps in closed form — real seconds-scale rows where the unrolled
-      programs used to cost 512 s / 286 s at 1024 devices;
-    * tiered ring_allreduce / all_to_all at >= 1024: the tiered fabric is
-      outside the lockstep solver's flat-ring eligibility, so the generic
-      timeline engine would walk O(devices) phases x O(devices) lanes
-      (minutes of wall); the 256-device tiered rows pin that scaling;
-    * flat single-tier hierarchical_allreduce / pipeline_p2p at >= 1024:
-      the flat shape exists to contrast tier routing, which their pod rows
-      are not about; for hierarchical_allreduce it additionally degenerates
-      to an O(devices)-step intra ring per device (hours of wall).
+    * flat ring_allreduce / all_to_all at >= 1024 devices ride the flat
+      lockstep solver (symbolic programs; closed-form rank x step advance);
+    * tiered ring_allreduce / all_to_all / hierarchical_allreduce at
+      >= 1024 ride the tiered lockstep solver
+      (``repro.core.lockstep_tiered``): group-uniform bulk solving with
+      multi-leg route pricing gives real seconds-scale rows on the
+      two_tier, fat_tree, and rail_optimized presets — shapes that used
+      to be skipped as timeline-minutes;
+    * pipeline_p2p pod rows stay on the timeline engine (cross-group
+      pipelined chains are outside any bulk solver's schedule), but its
+      programs are O(microbatches), not O(devices), so the walk is
+      seconds-scale and every shape runs;
+    * flat single-tier hierarchical_allreduce at >= 1024 is the one
+      genuinely program-size-bound shape left: with the whole pod as one
+      node it degenerates to an O(devices)-step intra-node ring per
+      device — O(devices^2) phase sites, hours of wall on any engine —
+      and the flat shape exists only to contrast tier routing, which its
+      tiered pod rows already pin.
     """
     if devices < 1024:
         return None
-    if name in ("ring_allreduce", "all_to_all"):
-        if dpn is None:
-            return None  # symbolic program + lockstep solver: seconds-scale
+    if name == "hierarchical_allreduce" and dpn is None:
         return (
-            f"{name} tiered shape skipped at {devices} devices: outside "
-            "the lockstep solver's flat-ring eligibility, the timeline "
-            "engine walks O(devices^2) phases (minutes of wall); "
-            "256-device tiered rows pin its scaling, flat pod rows ride "
-            "the lockstep solver"
+            "flat single-tier hierarchical_allreduce degenerates to an "
+            f"O(devices)-step intra-node ring per device at {devices} "
+            "devices (O(devices^2) phase sites, hours of wall on any "
+            "engine); the tiered pod rows cover the scenario"
         )
-    if dpn is None:
-        return "flat single-tier shape skipped at pod scale"
     return None
 
 
@@ -262,6 +271,10 @@ def main() -> None:
                     continue
                 best = None
                 for _ in range(max(1, args.repeats)):
+                    # pod-scale rows leave multi-GB heaps behind; collect
+                    # before timing so each row's wall measures its own
+                    # work, not the previous row's garbage
+                    gc.collect()
                     r = simulate(name, base, devices=nd, closed_loop=True,
                                  devices_per_node=dpn, fabric=fab,
                                  collect_segments=False)

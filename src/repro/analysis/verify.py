@@ -611,6 +611,23 @@ def verify_scenario(
     return verify_graph(g, fabric=fabric)
 
 
+def _try_tiered_plan(cfg, sc) -> Optional[str]:
+    """Compile the scenario through the tiered group-uniform lockstep
+    planner; None on success (the plan's total instruction order proves
+    deadlock freedom), else the compiler's refusal reason."""
+    from repro.core.cluster import Cluster
+    from repro.core.lockstep import LockstepEngine, lockstep_support
+
+    try:
+        cluster = Cluster(cfg, sc, collect_segments=False)
+    except (ValueError, NotImplementedError) as e:
+        return f"cluster construction failed: {e}"
+    reason = lockstep_support(cluster)
+    if reason is not None:
+        return reason
+    return LockstepEngine(cluster).compile()
+
+
 def verify_symbolic(
     scenario: ScenarioLike,
     cfg: Optional[SimConfig] = None,
@@ -632,11 +649,18 @@ def verify_symbolic(
     matched plan cannot cycle, because the wait-for relation is embedded in
     a total order.  Work and memory are O(segments x devices).
 
-    Returns a clean :class:`Verdict` on success.  A program outside the
-    rank-uniform affine families yields a single ``symbolic-shape`` warning
-    (severity "warning": such programs are covered by the materialized
-    :func:`verify_scenario` instead); a rank-uniform program whose wait has
-    no earlier matching emission is an error (the engines would deadlock).
+    Returns a clean :class:`Verdict` on success.  Programs outside the
+    globally rank-uniform families get a second chance at *group* level:
+    the tiered lockstep compiler (:mod:`repro.core.lockstep_tiered`)
+    schedules group-uniform programs (leader/worker splits, per-stage
+    groups) into one total instruction order, and a successful compile is
+    the same deadlock-freedom argument — every wait column is consumed by
+    a strictly earlier emission instance.  A program outside both lowering
+    families yields a single ``symbolic-shape`` warning (severity
+    "warning": such programs are covered by the materialized
+    :func:`verify_scenario` instead); a rank-uniform program whose wait
+    has no earlier matching emission is an error (the engines would
+    deadlock).
     """
     from repro.core.lockstep import UnsupportedProgram, plan_stages
     from repro.core.scenario import as_symbolic
@@ -700,7 +724,17 @@ def verify_symbolic(
                 "would deadlock at this wait",
             ))
             return v
-        return skip(msg)
+        # outside the flat rank-uniform families: retry at group level
+        # through the tiered compiler.  A group-level schedule failure is
+        # NOT a deadlock verdict — cross-group pipelined chains are valid
+        # programs the timeline engine runs fine — so it stays a warning
+        # carrying the compiler's blame (group, rank, phase, flag).
+        tiered_msg = _try_tiered_plan(cfg, sc)
+        if tiered_msg is None:
+            return v
+        return skip(
+            f"{msg}; group-level lowering also declined: {tiered_msg}"
+        )
     except ValueError as e:  # address-map probing (bad slot/device)
         v.findings.append(Finding(
             "invalid-emit",

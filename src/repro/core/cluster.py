@@ -155,12 +155,18 @@ class Cluster:
         sanitize: bool = False,
         timeline: Optional[bool] = None,
         lockstep: Optional[bool] = None,
+        plan_cache=None,
+        plan_key=None,
     ):
         self.cfg = cfg.validate()
         self.scenario = scenario
         self.amap = scenario.amap
         self.perturb = perturb
         self.collect_segments = collect_segments
+        # optional cross-run lockstep plan cache (sweeps revisiting the
+        # same shape skip recompilation; plans are read-only at run time)
+        self._plan_cache = plan_cache
+        self._plan_key = plan_key
         # None = auto (use the timeline engine when eligible), True = require
         # it (error when ineligible), False = never
         self._timeline = timeline
@@ -479,10 +485,12 @@ class Cluster:
                 "for the timeline engine, which is not in use here "
                 f"({tl_reason or 'engine is not EngineKind.EVENT'})"
             )
+        lockstep_reason: Optional[str] = None
         if use_timeline:
             # the bulk lockstep solver substitutes for the timeline engine
-            # when every rank runs the same symbolic program shape on the
-            # flat ring; anything else falls back to the generic timeline
+            # when every rank (or every rank of each program group, on the
+            # multi-tier presets) runs a group-uniform symbolic program;
+            # anything else falls back to the generic timeline
             ls_reason: Optional[str] = None
             ls_engine = None
             if self._lockstep is not False:
@@ -491,20 +499,49 @@ class Cluster:
                 ls_reason = lockstep_support(self)
                 if ls_reason is None:
                     ls_engine = LockstepEngine(self)
-                    ls_reason = ls_engine.compile()
+                    cache = self._plan_cache
+                    key = self._plan_key
+                    cached = (
+                        cache.get(key)
+                        if cache is not None and key is not None
+                        else None
+                    )
+                    ls_reason = ls_engine.compile(reuse=cached)
+                    if (
+                        ls_reason is None
+                        and cached is None
+                        and cache is not None
+                        and key is not None
+                    ):
+                        cache[key] = ls_engine.plan_handle()
             else:
                 ls_reason = "lockstep=False disables the bulk solver"
             if self._lockstep is True and ls_reason is not None:
                 raise ValueError(
                     f"lockstep solver requested but unavailable: {ls_reason}"
                 )
+            res = None
             if ls_reason is None:
-                res = ls_engine.run()
-                lockstep_used = True
-            else:
+                from .lockstep import UnsupportedProgram
+
+                try:
+                    res = ls_engine.run()
+                    lockstep_used = True
+                except UnsupportedProgram as exc:
+                    # the solver mutates cluster state only in its final
+                    # write-back, so a mid-solve refusal (e.g. a run-time
+                    # route spot-check) falls back to the timeline cleanly
+                    ls_reason = f"lockstep solve failed: {exc}"
+                    if self._lockstep is True:
+                        raise ValueError(
+                            "lockstep solver requested but unavailable: "
+                            f"{ls_reason}"
+                        ) from exc
+            if res is None:
                 from .cohort_timeline import TimelineEngine
 
                 res = TimelineEngine(self).run()
+            lockstep_reason = "engaged" if lockstep_used else ls_reason
             engine_name = "event"  # same semantics & counters as the event
             # engine; meta["engine_impl"] records the implementation
         else:
@@ -515,6 +552,11 @@ class Cluster:
             )
             res = engine.run_nodes([(n.target, n.wtt) for n in self.nodes])
             engine_name = engine.name
+            why = tl_reason or "engine is not EngineKind.EVENT"
+            lockstep_reason = (
+                "lockstep solver substitutes for the timeline engine, "
+                f"which is not in use here ({why})"
+            )
         if self._san is not None:
             self._san.check()
 
@@ -576,6 +618,7 @@ class Cluster:
                 "closed_loop": True,
                 "sanitized": self._san is not None,
                 "engine_impl": "timeline" if use_timeline else engine_name,
+                "lockstep_reason": lockstep_reason,
                 "program_stats": program_stats,
                 **(
                     {"wall_breakdown": res.breakdown}

@@ -119,9 +119,12 @@ class _ProgramTable:
     def __init__(self, phases, tdelta_for=None):
         # ``phases`` may be a flat tuple or a SymbolicProgram — iterating the
         # latter materializes (memoized) PhaseSpecs, which is fine here: the
-        # generic lane path is per-step anyway, and the bulk lockstep solver
-        # (``core.lockstep``) takes over before this table is ever built for
-        # the pod-scale flat collectives.
+        # generic lane path is per-step anyway, and the bulk lockstep
+        # solvers (``core.lockstep`` flat, ``core.lockstep_tiered``
+        # group-uniform over multi-tier presets) take over before this
+        # table is ever built for the pod-scale collectives; only shapes
+        # they decline — cross-group pipelined chains, recorded in
+        # ``meta["lockstep_reason"]`` — reach this walk at pod scale.
         specs = tuple(phases)
         self.specs = specs
         self.n = len(specs)

@@ -107,15 +107,20 @@ def lockstep_support(cluster) -> Optional[str]:
     if cluster._san is not None:
         return "traffic sanitization observes individual write enactments"
     fab = cluster.fabric
-    if fab.spec.name != "ring" or fab.n_nodes != 1:
+    rcls = type(fab.spec.routing).__name__
+    supported = {
+        "ring": "_RingRouting",
+        "two_tier": "_TwoTierRouting",
+        "fat_tree": "_FatTreeRouting",
+        "rail_optimized": "_RailRouting",
+    }
+    if supported.get(fab.spec.name) != rcls:
         return (
-            f"fabric {fab.spec.name!r} with {fab.n_nodes} node(s) is not the "
-            "flat single-tier ring"
+            f"fabric {fab.spec.name!r} (routing {rcls}) is outside the "
+            "lockstep presets (ring, two_tier, fat_tree, rail_optimized)"
         )
-    if type(fab.spec.routing).__name__ != "_RingRouting":
-        return "fabric routing policy is not the flat ring policy"
     if "ici" not in fab._cls:
-        return "flat ring fabric lacks an 'ici' link class"
+        return f"fabric {fab.spec.name!r} lacks an 'ici' link class"
     for node in cluster.nodes:
         if node.monitor is not None:
             return "monitor-based sync is per-write; lockstep needs SPIN"
@@ -617,17 +622,40 @@ class LockstepEngine:
     def __init__(self, cluster):
         self.cluster = cluster
         self._plan: Optional[_Plan] = None
+        self._tiered = None
         self.breakdown: Dict[str, float] = {}
 
-    def compile(self) -> Optional[str]:
+    def compile(self, reuse=None) -> Optional[str]:
         """Build the stage plan; returns a fallback reason or None.
 
+        The flat single-tier ring keeps the original rank-uniform stage
+        plan; every other supported preset compiles through the tiered
+        group-uniform solver (:mod:`repro.core.lockstep_tiered`).
         Compilation mutates nothing, so a failure here falls back to the
         generic timeline engine cleanly.
+
+        ``reuse`` accepts a :meth:`plan_handle` compiled for an identical
+        (scenario, config, fabric) point — plans are read-only at run time,
+        so a sweep revisiting the same shape skips recompilation.
         """
         t0 = time.perf_counter()
+        if reuse is not None:
+            kind, plan = reuse
+            if kind == "tiered":
+                self._tiered = plan
+            else:
+                self._plan = plan
+            self.breakdown["compile_s"] = time.perf_counter() - t0
+            self.breakdown["compile_cached"] = 1.0
+            return None
+        fab = self.cluster.fabric
         try:
-            self._plan = _compile(self.cluster)
+            if fab.spec.name == "ring" and fab.n_nodes == 1:
+                self._plan = _compile(self.cluster)
+            else:
+                from .lockstep_tiered import compile_tiered
+
+                self._tiered = compile_tiered(self.cluster)
         except UnsupportedProgram as e:
             return str(e)
         except ValueError as e:  # e.g. address-map probing out of range
@@ -635,7 +663,20 @@ class LockstepEngine:
         self.breakdown["compile_s"] = time.perf_counter() - t0
         return None
 
+    def plan_handle(self):
+        """The compiled plan as an opaque (kind, plan) pair for reuse via
+        ``compile(reuse=...)``; None before a successful compile."""
+        if self._tiered is not None:
+            return ("tiered", self._tiered)
+        if self._plan is not None:
+            return ("flat", self._plan)
+        return None
+
     def run(self) -> EngineResult:
+        if self._tiered is not None:
+            from .lockstep_tiered import run_tiered
+
+            return run_tiered(self.cluster, self._tiered, self.breakdown)
         t0 = time.perf_counter()
         plan = self._plan
         assert plan is not None, "compile() must succeed before run()"

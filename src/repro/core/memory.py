@@ -14,7 +14,7 @@ a *flag read* (spin-wait / monitor-validation traffic) or a *non-flag read*
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .events import RegisteredWrite
@@ -191,6 +191,26 @@ class AddressMap:
 
     def line_of(self, addr: int) -> int:
         return addr & ~(LINE_BYTES - 1)
+
+    def with_partial_clearance(self) -> "AddressMap":
+        """Return a map whose partial-tile region starts above the flag
+        region.
+
+        The default bases leave ~16 MB between ``flag_base`` and
+        ``partial_base``; a pod-scale flag pool (``flag_slots * n_devices *
+        flag_stride`` bytes) can overrun that gap, and data-marker writes —
+        allocated upward from ``partial_base`` — then *alias high flag
+        slots*, so a stale marker satisfies a flag wait long before the
+        real emission arrives.  Scenarios with per-step flag slots must
+        call this when constructing their map so the two regions never
+        overlap.  A no-op (returns ``self``) when the gap already clears.
+        """
+        hi = self.flag_region()[1]
+        if hi <= self.partial_base:
+            return self
+        page = 0x1000
+        bumped = (hi + page - 1) // page * page
+        return replace(self, partial_base=bumped)
 
 
 @dataclass

@@ -437,9 +437,9 @@ class SymbolicProgram:
     mix symbolic and materialized programs as keys of one dict.
     """
 
-    __slots__ = ("segments", "_starts", "_len", "_memo", "_hash")
+    __slots__ = ("segments", "group", "_starts", "_len", "_memo", "_hash")
 
-    def __init__(self, segments: Iterable[Segment]):
+    def __init__(self, segments: Iterable[Segment], group: Optional[str] = None):
         segs: List[Segment] = []
         starts: List[int] = []
         n = 0
@@ -458,6 +458,11 @@ class SymbolicProgram:
             starts.append(n)
             n += cnt
         self.segments: Tuple[Segment, ...] = tuple(segs)
+        #: Optional group-uniformity label stamped by the scenario: ranks
+        #: sharing a label are claimed to run programs that are uniform under
+        #: an affine rank remapping.  Advisory metadata for the lockstep
+        #: group classifier — excluded from equality and hashing.
+        self.group: Optional[str] = group
         self._starts: Tuple[int, ...] = tuple(starts)
         self._len = n
         self._memo: Dict[int, PhaseSpec] = {}
@@ -514,7 +519,8 @@ class SymbolicProgram:
         return self._hash
 
     def __repr__(self) -> str:
-        return f"SymbolicProgram({self._len} phases, {len(self.segments)} segments)"
+        tag = f", group={self.group!r}" if self.group is not None else ""
+        return f"SymbolicProgram({self._len} phases, {len(self.segments)} segments{tag})"
 
     # -- materialization and summaries --------------------------------------
 
@@ -801,6 +807,8 @@ def simulate(
     sanitize: bool = False,
     timeline: Optional[bool] = None,
     lockstep: Optional[bool] = None,
+    _plan_cache=None,
+    _plan_key=None,
     **params,
 ):
     """Simulate one kernel launch of ``scenario`` under ``cfg``.
@@ -848,10 +856,16 @@ def simulate(
     when ineligible), ``False`` always uses the per-phase interpreter.
 
     ``lockstep`` (closed loop only) is the same tri-state for the bulk
-    lockstep solver (:mod:`repro.core.lockstep`), which substitutes for the
-    timeline engine when every rank runs the same symbolic program shape on
-    the flat ring — whole loops advance as closed forms instead of per-phase
-    interpretation, making 1024-4096 device flat collectives practical.
+    lockstep solvers, which substitute for the timeline engine — whole
+    loops advance as closed forms instead of per-phase interpretation.
+    The flat solver (:mod:`repro.core.lockstep`) covers globally
+    rank-uniform programs on the single-tier ring; the tiered solver
+    (:mod:`repro.core.lockstep_tiered`) covers group-uniform programs
+    (leaders vs. workers, the uniform collectives) over the ``two_tier``,
+    ``fat_tree``, and ``rail_optimized`` presets, pricing real multi-leg
+    routes.  Together they make 1024-4096 device collectives — flat and
+    tiered — practical; ``Report.meta["lockstep_reason"]`` records either
+    ``"engaged"`` or the exact reason the solvers declined.
     """
     from .simulator import Eidola  # late import: simulator imports target
 
@@ -883,6 +897,8 @@ def simulate(
             sanitize=sanitize,
             timeline=timeline,
             lockstep=lockstep,
+            plan_cache=_plan_cache,
+            plan_key=_plan_key,
         ).run()
     if sanitize:
         raise ValueError(
@@ -967,6 +983,12 @@ class SweepRunner:
         self.engines = tuple(engines)
         self.perturb = perturb
         self.collect_segments = collect_segments
+        # compiled lockstep plans keyed by the point's full (scenario,
+        # engine, config, params) identity; plans are read-only at run
+        # time, so revisiting a shape (e.g. sweeping a non-structural
+        # parameter per repeat) skips recompilation.  Perturbed sweeps
+        # bypass the cache: a perturbation may reroute the run entirely.
+        self._plan_cache: Dict[tuple, object] = {}
 
     def run(self, grid: Optional[Dict[str, Iterable]] = None, **grid_kw) -> List[SweepPoint]:
         grid = dict(grid or {})
@@ -992,11 +1014,26 @@ class SweepRunner:
             params = {k: v for k, v in assignment.items() if k not in _CFG_FIELDS}
             for eng in self.engines:
                 cfg = self.base_cfg.with_(engine=eng, **overrides)
+                plan_key = (
+                    (
+                        self.scenario_cls.name,
+                        repr(cfg),
+                        tuple(
+                            sorted((k, repr(v)) for k, v in params.items())
+                        ),
+                    )
+                    if self.perturb is None
+                    else None
+                )
                 report = simulate(
                     self.scenario_cls,
                     cfg,
                     perturb=self.perturb,
                     collect_segments=self.collect_segments,
+                    _plan_cache=(
+                        self._plan_cache if plan_key is not None else None
+                    ),
+                    _plan_key=plan_key,
                     **params,
                 )
                 points.append(

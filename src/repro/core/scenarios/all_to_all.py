@@ -224,7 +224,8 @@ class AllToAllScenario(Scenario):
                         local_writes(1, share),
                     ),
                 ),
-            )
+            ),
+            group="all",
         )
 
     def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:

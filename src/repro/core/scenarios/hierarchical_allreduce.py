@@ -379,7 +379,7 @@ class HierarchicalAllReduceScenario(Scenario):
                 ),
             )
         )
-        return SymbolicProgram(segs)
+        return SymbolicProgram(segs, group="leader" if is_leader else "worker")
 
     def _flat_phases(self, device: int):
         """Pre-refactor flat phase construction — the reference oracle for

@@ -345,7 +345,8 @@ class PipelineP2PScenario(Scenario):
                 )
             )
         return SymbolicProgram(
-            (LoopSpec(self.n_microbatches, tuple(body)),)
+            (LoopSpec(self.n_microbatches, tuple(body)),),
+            group="head" if first else ("tail" if last else "interior"),
         )
 
     def traces(self) -> TraceBundle:

@@ -115,9 +115,12 @@ class RingAllReduceScenario(Scenario):
 
     @classmethod
     def default_amap(cls, cfg: SimConfig) -> AddressMap:
+        # per-step flag slots overrun the default flag/partial gap beyond
+        # ~256 devices; clear the partial region so ring-step waits can
+        # never be satisfied by stale data-marker writes
         return AddressMap(
             n_devices=cfg.n_devices, flag_slots=max(1, 2 * (cfg.n_devices - 1))
-        )
+        ).with_partial_clearance()
 
     # ------------------------------------------------------------------
 
@@ -271,7 +274,7 @@ class RingAllReduceScenario(Scenario):
                 traffic=(reads(sectors, cfg.sector_bytes), local_writes(1, share)),
             ),
         ]
-        return SymbolicProgram(segments)
+        return SymbolicProgram(segments, group="ring")
 
     def _rank_programs(self, rank: int, *, emit: bool) -> List[WGProgram]:
         """Per-step ring program of one rank; with ``emit`` the step-k flag is

@@ -312,6 +312,9 @@ def main(argv=None) -> int:
                     f"built in {ps['construct_wall_s'] * 1e3:.1f} ms | "
                     f"advanced by {impl}"
                 )
+            reason = report.meta.get("lockstep_reason")
+            if reason:
+                print(f"lockstep: {reason}")
     return 0
 
 

@@ -67,6 +67,18 @@ def test_architecture_md_symbolic_example_executes():
     exec(compile(sym[0], "ARCHITECTURE.md:symbolic_programs", "exec"), {})
 
 
+def test_architecture_md_tiered_lockstep_example_executes():
+    # the 1024-device tiered hierarchical_allreduce snippet: group-uniform
+    # bulk solving over the two-tier fabric engages (lockstep_reason ==
+    # "engaged") and prices real DCI legs; a failure here means the doc
+    # lies about the tiered solver
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    tiered = [b for b in blocks if "lockstep_reason" in b]
+    assert len(tiered) == 1, "expected exactly one tiered-lockstep block"
+    exec(compile(tiered[0], "ARCHITECTURE.md:tiered_lockstep", "exec"), {})
+
+
 @pytest.mark.slow
 def test_architecture_md_pod_scale_example_executes():
     # the 1024-device timeline-engine snippet runs as written (tens of

@@ -189,3 +189,59 @@ ENTRY %main (a: f32[8,8]) -> f32[8,8] {{
     mod = analyze_hlo(hlo)
     assert mod.max_while_trip() == trip
     assert mod.dot_flops() == trip * 2 * 8 * 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# tiered lockstep: group-uniform solving over multi-tier fabrics
+# ---------------------------------------------------------------------------
+
+from repro.core.scenario import get_scenario, simulate  # noqa: E402
+
+_TIERED_KEYS = (
+    "flag_reads", "nonflag_reads", "local_writes", "xgmi_writes_in",
+    "xgmi_writes_out", "xgmi_bytes_in", "xgmi_bytes_out", "read_bytes",
+    "write_bytes",
+)
+
+
+def _tiered_sig(r):
+    return (
+        tuple(r.traffic.get(k) for k in _TIERED_KEYS),
+        r.sim_cycles,
+        tuple(sorted((d, tuple(sorted(t.items()))) for d, t in
+                     r.per_device.items())),
+        (r.wtt_registered, r.wtt_enacted),
+        tuple(sorted((k, v) for k, v in r.meta["fabric"].items()
+                     if isinstance(v, int))),
+    )
+
+
+@given(
+    name=st.sampled_from([
+        "ring_allreduce", "all_to_all", "hierarchical_allreduce",
+        "pipeline_p2p",
+    ]),
+    fabric=st.sampled_from(["two_tier", "fat_tree", "rail_optimized"]),
+    dpn=st.sampled_from([2, 3, 4]),
+    nodes=st.integers(min_value=2, max_value=8),
+)
+@settings(max_examples=14, deadline=None)
+def test_tiered_lockstep_matches_timeline(name, fabric, dpn, nodes):
+    n = dpn * nodes
+    if not 4 <= n <= 33:
+        return
+    cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(n)
+    kw = dict(devices=n, closed_loop=True, collect_segments=False,
+              devices_per_node=dpn, fabric=fabric)
+    fast = simulate(name, cfg, **kw)  # lockstep auto-selects
+    slow = simulate(name, cfg, lockstep=False, **kw)
+    if name == "pipeline_p2p":
+        # cross-rank pipelined chains fall back with a group-level blame
+        assert "group" in fast.meta["lockstep_reason"]
+        assert fast.meta["program_stats"]["lockstep"] is False
+    else:
+        assert fast.meta["lockstep_reason"] == "engaged", (
+            name, fabric, n, dpn, fast.meta["lockstep_reason"],
+        )
+        assert fast.meta["program_stats"]["lockstep"] is True
+    assert _tiered_sig(fast) == _tiered_sig(slow), (name, fabric, n, dpn)

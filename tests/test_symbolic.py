@@ -216,19 +216,38 @@ def test_lockstep_bit_identity(name, n):
 
 
 def test_lockstep_requires_eligible_shape():
-    # non-rank-uniform programs cannot use the bulk solver
-    with pytest.raises(ValueError, match="lockstep"):
+    # cross-rank pipelined chains cannot use the bulk solver; the refusal
+    # names the blocked group, rank, phase, and flag
+    with pytest.raises(ValueError, match="lockstep") as ei:
         simulate(
-            "hierarchical_allreduce", _cfg(8), lockstep=True, devices=8,
+            "pipeline_p2p", _cfg(8), lockstep=True, devices=8,
             devices_per_node=2, closed_loop=True, collect_segments=False,
         )
-    # ...but fall back to the generic timeline engine when not forced
+    msg = str(ei.value)
+    assert "group 'interior'" in msg
+    assert "rank 2" in msg
+    assert "wait_flags" in msg
+    assert "writer 1" in msg
+    # ...but fall back to the generic timeline engine when not forced,
+    # recording the same blame in the report
     r = simulate(
-        "hierarchical_allreduce", _cfg(8), devices=8, devices_per_node=2,
+        "pipeline_p2p", _cfg(8), devices=8, devices_per_node=2,
         closed_loop=True, collect_segments=False,
     )
     assert r.meta["engine_impl"] == "timeline"
     assert r.meta["program_stats"]["lockstep"] is False
+    assert "group 'interior'" in r.meta["lockstep_reason"]
+
+
+def test_lockstep_engages_group_uniform_tiers():
+    # leader/worker group splits compile through the tiered solver on the
+    # multi-tier presets (this shape used to be a hard refusal)
+    r = simulate(
+        "hierarchical_allreduce", _cfg(8), lockstep=True, devices=8,
+        devices_per_node=2, closed_loop=True, collect_segments=False,
+    )
+    assert r.meta["program_stats"]["lockstep"] is True
+    assert r.meta["lockstep_reason"] == "engaged"
 
 
 def test_lockstep_rejects_open_loop():
@@ -280,12 +299,24 @@ def test_verify_symbolic_pod_scale_is_loop_space():
 def test_verify_symbolic_shape_skip_is_declared():
     from repro.analysis.verify import verify_symbolic
 
+    # leader/worker groups verify through the tiered group-level lowering:
+    # no skip finding any more
     v = verify_symbolic(
         "hierarchical_allreduce", devices=8, devices_per_node=2,
         closed_loop=True,
     )
     assert v.ok
-    assert [f for f in v.findings if f.kind == "symbolic-shape"]
+    assert not [f for f in v.findings if f.kind == "symbolic-shape"]
+
+    # cross-rank pipelined chains stay out of both lowerings; the skip
+    # carries the tiered compiler's blame
+    vp = verify_symbolic(
+        "pipeline_p2p", devices=8, devices_per_node=2, closed_loop=True,
+    )
+    assert vp.ok
+    skips = [f for f in vp.findings if f.kind == "symbolic-shape"]
+    assert skips
+    assert "group 'interior'" in skips[0].message
 
 
 def test_verify_symbolic_catches_unmatched_wait():

@@ -1,0 +1,148 @@
+"""Tiered lockstep: group-uniform bulk solving over multi-tier fabrics.
+
+Seeded-random cross-engine identity and group-IR round-trips that must run
+unconditionally (the hypothesis-driven shape sweep lives in
+``test_property.py`` and is skipped when hypothesis is absent).
+"""
+
+import random
+
+from repro.core import EngineKind, SimConfig
+from repro.core.scenario import get_scenario, simulate
+
+_KEYS = (
+    "flag_reads", "nonflag_reads", "local_writes", "xgmi_writes_in",
+    "xgmi_writes_out", "xgmi_bytes_in", "xgmi_bytes_out", "read_bytes",
+    "write_bytes",
+)
+
+
+def _sig(r):
+    return (
+        tuple(r.traffic.get(k) for k in _KEYS),
+        r.sim_cycles,
+        tuple(sorted(
+            (d, tuple(sorted(t.items()))) for d, t in r.per_device.items()
+        )),
+        (r.wtt_registered, r.wtt_enacted),
+        tuple(sorted(
+            (k, v) for k, v in r.meta["fabric"].items()
+            if isinstance(v, int)
+        )),
+    )
+
+
+def test_three_engine_bit_identity_seeded():
+    # seeded random shapes through all three implementations: the per-WG
+    # event interpreter, the cohort timeline, and the tiered bulk solver
+    rng = random.Random(0x51D07A)
+    names = ["ring_allreduce", "all_to_all", "hierarchical_allreduce"]
+    fabrics = ["two_tier", "fat_tree", "rail_optimized"]
+    for _ in range(3):
+        name = rng.choice(names)
+        fabric = rng.choice(fabrics)
+        dpn = rng.choice([2, 3, 4])
+        n = dpn * rng.randint(2, 5)
+        cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(n)
+        kw = dict(devices=n, closed_loop=True, collect_segments=False,
+                  devices_per_node=dpn, fabric=fabric)
+        event = simulate(name, cfg, timeline=False, **kw)
+        timeline = simulate(name, cfg, lockstep=False, **kw)
+        lockstep = simulate(name, cfg, lockstep=True, **kw)
+        assert timeline.meta["engine_impl"] == "timeline"
+        assert lockstep.meta["lockstep_reason"] == "engaged"
+        s_event = _sig(event)
+        assert s_event == _sig(timeline), (name, fabric, n, dpn)
+        assert s_event == _sig(lockstep), (name, fabric, n, dpn)
+
+
+def test_tiered_identity_all_scenarios_all_fabrics():
+    # every closed-loop scenario x every tiered preset at one odd shape;
+    # pipeline falls back (identity then holds trivially, but the recorded
+    # reason must carry the group blame)
+    for name in ("ring_allreduce", "all_to_all", "hierarchical_allreduce",
+                 "pipeline_p2p"):
+        for fabric in ("two_tier", "fat_tree", "rail_optimized"):
+            n, dpn = 12, 4
+            cfg = SimConfig(
+                engine=EngineKind.EVENT, workgroups=4,
+            ).with_devices(n)
+            kw = dict(devices=n, closed_loop=True, collect_segments=False,
+                      devices_per_node=dpn, fabric=fabric)
+            fast = simulate(name, cfg, **kw)  # lockstep auto-selects
+            slow = simulate(name, cfg, lockstep=False, **kw)
+            if name == "pipeline_p2p":
+                assert "group" in fast.meta["lockstep_reason"]
+                assert fast.meta["program_stats"]["lockstep"] is False
+            else:
+                assert fast.meta["lockstep_reason"] == "engaged", (
+                    name, fabric, fast.meta["lockstep_reason"],
+                )
+            assert _sig(fast) == _sig(slow), (name, fabric)
+
+
+def test_ring_flag_pool_clears_partial_region():
+    # per-step flag slots would overrun the default flag/partial gap beyond
+    # ~256 devices; the scenario's map must keep the regions disjoint so
+    # data-marker writes can never alias (and stale-satisfy) ring-step flags
+    ring = get_scenario("ring_allreduce")
+    for n in (8, 256, 512, 4096):
+        amap = ring.default_amap(SimConfig().with_devices(n))
+        assert amap.flag_region()[1] <= amap.partial_base, n
+    small = ring.default_amap(SimConfig().with_devices(8))
+    from repro.core.memory import AddressMap
+
+    assert small.partial_base == AddressMap.partial_base  # no-op below scale
+
+
+def test_marker_alias_declines_with_blame():
+    # hierarchical_allreduce's legacy layout lets data-marker writes reach
+    # high flag slots at 256 nodes; the solver must refuse (the engines
+    # resolve waits by value, so a stale marker satisfies them early) and
+    # name the rank and flag, and the auto fallback must record the blame
+    import pytest
+
+    cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(512)
+    with pytest.raises(ValueError, match=r"data-marker writes on rank \d+"
+                                         r" reach flag \(writer \d+, slot"):
+        simulate(
+            "hierarchical_allreduce", cfg, devices=512, closed_loop=True,
+            collect_segments=False, devices_per_node=2, fabric="two_tier",
+            lockstep=True,
+        )
+
+
+def test_group_classification_roundtrips_expand():
+    # the tiered plan's per-group schedule must replay each member rank's
+    # SymbolicProgram.expand() phase-for-phase (names and order)
+    from repro.core.cluster import Cluster
+    from repro.core.lockstep_tiered import compile_tiered
+    from repro.core.scenario import as_symbolic
+
+    for name, n, dpn in (
+        ("ring_allreduce", 12, 4),
+        ("all_to_all", 12, 4),
+        ("hierarchical_allreduce", 12, 4),
+        ("hierarchical_allreduce", 33, 3),
+    ):
+        cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(n)
+        sc = get_scenario(name)(
+            cfg, closed_loop=True, devices_per_node=dpn, fabric="two_tier",
+        )
+        plan = compile_tiered(Cluster(cfg, sc, collect_segments=False))
+        seen = set()
+        for grp in plan.groups:
+            sched = [
+                ph.name
+                for seg in grp.segs
+                for _ in range(seg.count)
+                for ph in seg.body
+            ]
+            for dev in grp.devs:
+                dev = int(dev)
+                seen.add(dev)
+                sp = as_symbolic(sc.programs_for(dev)[0].phases)
+                assert sp is not None
+                expanded = [p.name for p in sp.expand()]
+                assert sched == expanded, (name, n, dpn, dev)
+        assert seen == set(range(n)), (name, n, dpn)
