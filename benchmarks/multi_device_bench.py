@@ -27,20 +27,36 @@ Pod scale (1024+ devices) rides the timeline engine
 ``engine="event"`` — same semantics — with ``engine_impl`` naming the
 implementation).  Symbolic programs go further: the flat ring/all_to_all
 pod rows engage the flat lockstep solver (``repro.core.lockstep``), and
-the tiered ring/all_to_all pod rows — on two_tier, fat_tree, and
-rail_optimized alike — engage the tiered solver
-(``repro.core.lockstep_tiered``).  Tiered hierarchical pod rows stay on
-the timeline: the scenario's legacy flag pool overruns into the
-partial-tile region at 256 nodes, so data-marker writes alias high flag
-slots and the solver declines rather than mis-model the stale-flag
-visibility (``lockstep_reason`` carries the exact blame).  Either way
-every pod-scale bench row is a real 1024/4096-device run.  The one
-exclusion left is the flat single-tier hierarchical shape (genuinely
-program-size-bound: O(devices^2) phase sites), printed with its reason,
-never silent.  Rows carry a
+the tiered ring/all_to_all/hierarchical pod rows — on two_tier,
+fat_tree, and rail_optimized alike — engage the tiered solver
+(``repro.core.lockstep_tiered``).  Hierarchical engagement is new: its
+legacy flag pool used to overrun into the partial-tile region at pod
+scale (first bad count: 724 devices at 4 per node, found by the
+parametric layout prover in ``repro.analysis.layout``), which made
+data-marker writes alias the broadcast flags and stale-satisfy the
+``hbc_wait`` barriers.  The scenario now re-bases its partial region
+with ``AddressMap.with_partial_clearance()``, so the tiered pod rows
+solve in lockstep — and the bench *asserts* ``lockstep_reason ==
+"engaged"`` on every tiered non-pipeline pod row, including the
+32-devices-per-node hierarchical shapes at 1024 and 4096.
+
+**Baseline note (intentional regeneration):** the clearance re-base
+changes hierarchical_allreduce's pod-scale physics *by design* — the
+legacy baseline's 1024/4096 hierarchical counters were measured against
+stale-flag waits that completed early off aliased marker writes, so
+``flag_reads``/``sim_cycles``/``kernel_span_ns`` on exactly those rows
+differ from pre-PR-10 baselines.  Every other row (all scenarios below
+724 devices, and all pipeline/ring/all_to_all rows at every count) is
+bit-identical, verified with ``--check`` against the previous baseline
+before regeneration.
+
+``pipeline_p2p`` pod rows stay on the timeline engine (cross-group
+pipelined chains), and the one exclusion left is the flat single-tier
+hierarchical shape (genuinely program-size-bound: O(devices^2) phase
+sites), printed with its reason, never silent.  Rows carry a
 ``wall_breakdown`` section-timing dict when the timeline engine or
-lockstep solver ran; like ``wall_time_s`` it is measurement metadata, not
-simulation physics, so ``--check`` ignores it.
+lockstep solver ran; like ``wall_time_s`` and ``lockstep_reason`` it is
+measurement metadata, not simulation physics, so ``--check`` ignores it.
 
 Run: PYTHONPATH=src python benchmarks/multi_device_bench.py
      [--quick] [--devices 4,8,...] [--scenarios a,b] [--repeats N]
@@ -106,6 +122,9 @@ def pod_skip_reason(name: str, devices: int, dpn) -> str | None:
       multi-leg route pricing gives real seconds-scale rows on the
       two_tier, fat_tree, and rail_optimized presets — shapes that used
       to be skipped as timeline-minutes;
+    * tiered hierarchical_allreduce additionally runs a 32-devices-per-
+      node shape at >= 1024 (the physical scale-up-domain size), also in
+      lockstep;
     * pipeline_p2p pod rows stay on the timeline engine (cross-group
       pipelined chains are outside any bulk solver's schedule), but its
       programs are O(microbatches), not O(devices), so the walk is
@@ -249,11 +268,15 @@ def main() -> None:
         engine=EngineKind.EVENT,
     )
 
-    def shapes_for(nd: int):
-        """(devices_per_node, fabric) shapes one device count runs in: flat,
-        two-tier, and each graph-based preset on the tiered node split."""
+    def shapes_for(name: str, nd: int):
+        """(devices_per_node, fabric) shapes one (scenario, device count)
+        runs in: flat, two-tier, and each graph-based preset on the tiered
+        node split; hierarchical pod counts add a 32-device-node shape
+        (the physical scale-up-domain size — rides the tiered solver)."""
         out = [(None, None), (tiered_dpn(nd), None)]
         out.extend((tiered_dpn(nd), f) for f in FABRIC_PRESETS)
+        if name == "hierarchical_allreduce" and nd >= 1024:
+            out.append((32, None))
         return [(dpn, fab) for dpn, fab in out
                 if dpn is None or nd % dpn == 0]
 
@@ -263,7 +286,7 @@ def main() -> None:
           f"{'wall_ms':>9s}")
     for name in scenarios:
         for nd in device_counts:
-            for dpn, fab in shapes_for(nd):
+            for dpn, fab in shapes_for(name, nd):
                 skip = pod_skip_reason(name, nd, dpn)
                 if skip is not None:
                     print(f"[bench] skip {name} devices={nd} "
@@ -294,9 +317,10 @@ def main() -> None:
                         "sim_cycles": r.sim_cycles,
                         "wall_time_s": r.wall_time_s,
                         # implementation metadata, not simulation physics:
-                        # --check ignores both (it compares COUNTER_KEYS)
+                        # --check ignores these (it compares COUNTER_KEYS)
                         "engine_impl": r.meta.get("engine_impl"),
                         "wall_breakdown": r.meta.get("wall_breakdown"),
+                        "lockstep_reason": r.meta.get("lockstep_reason"),
                     }
                     if best is not None:
                         for k in COUNTER_KEYS:
@@ -327,7 +351,7 @@ def main() -> None:
     else:
         spot_scenarios = scenarios
     for name in spot_scenarios:
-        for dpn, fab in shapes_for(nd):
+        for dpn, fab in shapes_for(name, nd):
             pair = {}
             for eng in (EngineKind.CYCLE, EngineKind.EVENT):
                 r = simulate(name, base.with_(engine=eng), devices=nd,
@@ -344,6 +368,23 @@ def main() -> None:
           f"({len(rows)} rows)")
 
     failures = []
+    # tiered non-pipeline pod rows must ride the lockstep solver — an
+    # accidental fallback to the timeline walk (e.g. a layout regression
+    # reintroducing marker aliasing) is a coverage loss, not just a slow row
+    for row in rows:
+        if (row["devices"] >= 1024
+                and row.get("devices_per_node") is not None
+                and row["scenario"] != "pipeline_p2p"
+                and row.get("lockstep_reason") != "engaged"):
+            failures.append(
+                f"{row['scenario']} devices={row['devices']} "
+                f"dpn={row.get('devices_per_node')} "
+                f"fabric={row.get('fabric')}: tiered pod row did not engage "
+                f"the lockstep solver "
+                f"(lockstep_reason={row.get('lockstep_reason')!r})"
+            )
+    for f_ in failures:
+        print(f"[bench] LOCKSTEP {f_}")
     if args.max_row_wall is not None:
         for row in rows:
             if row["wall_time_s"] > args.max_row_wall:

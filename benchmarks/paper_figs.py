@@ -109,7 +109,7 @@ def fig10_scaling_m(engine=EngineKind.EVENT, repeats: int = 3) -> Dict:
     for M in (256, 512, 1024, 2048, 4096):
         cfg = SimConfig(M=M, sync=SyncPolicy.SPIN, engine=engine)
         times = []
-        for rep in range(repeats):
+        for _rep in range(repeats):
             t0 = time.perf_counter()
             run_gemv_allreduce(cfg, 10_000.0, collect_segments=False)
             times.append(time.perf_counter() - t0)

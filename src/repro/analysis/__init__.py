@@ -10,10 +10,26 @@ Two halves that cross-check each other:
   ``simulate(..., sanitize=True)``) shadows a closed-loop run and asserts
   byte conservation, calendar monotonicity, and exactly-once flag delivery.
 
+A third leg quantifies over device counts instead of instances:
+:func:`prove_layout` lowers a scenario's :class:`SymbolicProgram` +
+:class:`AddressMap` into affine address families and proves flag/partial/
+marker disjointness, unique flag writers, and wait/emit ordering for *all*
+device counts up to the scenario's ``max_devices`` bound — without expanding
+a single program (:mod:`repro.analysis.layout`).
+
 ``python -m repro.analysis`` verifies every registered scenario against every
-fabric preset (the CI gate).
+fabric preset and runs the layout prover over the closed-loop registry (the
+CI gate).
 """
 
+from .layout import (
+    LayoutFinding,
+    LayoutProof,
+    check_layout,
+    check_programs,
+    prove_layout,
+    prove_registry,
+)
 from .program_graph import EmitSite, Lane, ProgramGraph, WaitSite
 from .sanitize import SanitizerError, TrafficSanitizer
 from .verify import (
@@ -33,6 +49,12 @@ __all__ = [
     "TrafficSanitizer",
     "Finding",
     "Verdict",
+    "LayoutFinding",
+    "LayoutProof",
+    "check_layout",
+    "check_programs",
+    "prove_layout",
+    "prove_registry",
     "diagnose_deadlock",
     "verify_graph",
     "verify_scenario",

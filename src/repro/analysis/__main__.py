@@ -22,6 +22,13 @@ materialized lowering would need — and the loop-space verdict is
 cross-checked against the materialized verifier at ``--devices`` scale.
 Non-rank-uniform scenarios (e.g. hierarchical stages) are reported as
 covered by the materialized path.  ``--no-symbolic`` skips the stage.
+
+Last, the **parametric layout prover** (:mod:`repro.analysis.layout`)
+certifies every closed-loop scenario's flag/marker address layout for *all*
+device counts up to ``--max-devices`` (default 4096) on the flat shape and
+re-attests each fabric preset — flag pool / partial region / marker-window
+disjointness, unique flag writers per value epoch, and wait-before-emit
+ordering, without expanding a single program.  ``--no-layout`` skips it.
 """
 
 from __future__ import annotations
@@ -152,6 +159,31 @@ def _verify_symbolic_path(
     return failures
 
 
+def _verify_layout_path(
+    max_devices: int, dpn: int, quiet: bool
+) -> int:
+    """Parametric layout proofs over the closed-loop registry x fabric
+    presets — every device count up to ``max_devices``, no simulation.
+    Returns the failure count."""
+    from .layout import prove_registry
+
+    failures = 0
+    proofs = prove_registry(
+        max_devices=max_devices, devices_per_node=dpn, quiet=quiet
+    )
+    for proof in proofs:
+        if not proof.ok:
+            failures += 1
+            print(proof.render())
+        elif not quiet:
+            print(proof.render())
+    tag = "FAILED" if failures else "ok"
+    print(f"proved {len(proofs)} layout obligations (registry x fabrics, "
+          f"all n <= {max_devices}): {tag}"
+          + (f" ({failures} with errors)" if failures else ""))
+    return failures
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -174,6 +206,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument(
         "--no-symbolic", action="store_true",
         help="skip the loop-space symbolic verification stage",
+    )
+    ap.add_argument(
+        "--max-devices", type=int, default=4096,
+        help="device-count bound for the parametric layout-proof stage",
+    )
+    ap.add_argument(
+        "--layout-dpn", type=int, default=4,
+        help="devices-per-node used by the layout-proof stage",
+    )
+    ap.add_argument(
+        "--no-layout", action="store_true",
+        help="skip the parametric layout-proof stage",
     )
     args = ap.parse_args(argv)
 
@@ -212,6 +256,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not args.no_symbolic:
         failures += _verify_symbolic_path(
             args.devices, args.pod_devices, args.quiet
+        )
+    if not args.no_layout:
+        failures += _verify_layout_path(
+            args.max_devices, args.layout_dpn, args.quiet
         )
     return 1 if failures else 0
 

@@ -608,7 +608,19 @@ def verify_scenario(
                 f"fabric resolution failed: {e}",
             ))
             return v
-    return verify_graph(g, fabric=fabric)
+    verdict = verify_graph(g, fabric=fabric)
+    if sc.closed_loop:
+        # concrete layout obligations at this instance's exact shape (the
+        # all-n parametric form lives in prove_layout); findings merge into
+        # the same verdict so the CLI --verify path reports both
+        from .layout import check_layout
+
+        for f in check_layout(sc):
+            verdict.findings.append(Finding(f.kind, f.severity, f.message))
+        verdict.findings.sort(
+            key=lambda f: (f.severity != "error", f.kind)
+        )
+    return verdict
 
 
 def _try_tiered_plan(cfg, sc) -> Optional[str]:

@@ -889,140 +889,38 @@ def _decode_flag(amap, n, addr):
     return None, None
 
 
-def _check_flag_reuse(fams, recs, amap, cfg, n):
+def _check_flag_reuse(progs, amap, cfg):
     """Decline programs where a flag address the solver stitches to an
     emission can also be set by an *earlier, unrelated* write.
 
     The event and timeline engines resolve waits by *value*: once a flag
     address holds data, every later wait on it completes at the next poll.
     The solver instead stitches each wait to its affine-matched emission, so
-    any second writer of a stitched address makes the two disagree.  Two
-    writer classes exist:
+    any second writer of a stitched address makes the two disagree — either
+    a *flag rewrite* (two emission instances targeting one (rank, flag)) or
+    *marker aliasing* (``EmitOp.data_writes`` markers growing up from
+    ``partial_base`` into a flag pool that overran the gap).
 
-    1. *Flag rewrites* — two emission instances targeting the same
-       (destination rank, flag address).  Each non-fanout family's instance
-       ``k`` writes message ``i`` at ``addr_rel[i] + addr_step * k``; over
-       the instance range the addresses form an arithmetic progression per
-       message, and any two progressions to one destination that could share
-       a member are a potential rewrite (range intersection + gcd residue,
-       conservative).
-
-    2. *Marker aliasing* — ``EmitOp.data_writes`` markers land at
-       ``partial_base + 64 * seq`` on the destination, and the default
-       :class:`AddressMap` leaves only ~16 MB between ``flag_base`` and
-       ``partial_base``.  Pod-scale flag pools overrun that gap (observed:
-       ``hierarchical_allreduce`` at 256 nodes), so an early marker write
-       sets a high flag slot long before its real emission.  Both addresses
-       are 64-aligned, so any emitted flag address inside a destination's
-       marker window is a real alias; the total-marker window is a
-       conservative bound for the when-it-lands question.
-
-    Either way the program must stay on the timeline engine, which
-    reproduces the engines' stale-flag timing exactly.
+    The actual analysis lives in the parametric layout prover
+    (:func:`repro.analysis.layout.check_programs`) — one implementation,
+    shared with ``verify_scenario``/``prove_layout`` — and this gate cites
+    the prover's finding verbatim.  Declined shapes stay on the timeline
+    engine, which reproduces the engines' stale-flag timing exactly.
     """
-    spans = {}  # fam id -> (kmin, kmax, instances)
-    for rec in recs:
-        f = id(rec.fam)
-        lo, hi, cnt = spans.get(f, (rec.k, rec.k, 0))
-        spans[f] = (min(lo, rec.k), max(hi, rec.k), cnt + 1)
+    # analysis builds on core; import lazily to keep core import-light and
+    # cycle-free
+    from repro.analysis.layout import check_programs
 
-    def flagname(addr):
-        w, s = _decode_flag(amap, n, addr)
-        if w is not None:
-            return f"flag (writer {w}, slot {s})"
-        return f"flag 0x{addr:x}"
-
-    def blame(dst, addr):
-        raise _unsupported(
-            f"flag slot reuse: rank {dst} receives {flagname(addr)} from "
-            "more than one emission instance; stale-flag waits stay on the "
-            "timeline engine"
+    findings = check_programs(progs, amap, cfg)
+    for f in findings:
+        if f.severity != "error":
+            continue
+        tail = (
+            "; stale-flag waits stay on the timeline engine"
+            if f.kind == "flag-reuse"
+            else "; stale-flag visibility stays on the timeline engine"
         )
-
-    marks = np.zeros(n, np.int64)  # data-marker writes received per rank
-    dsts, los, his, steps = [], [], [], []
-    fan_lo = fan_hi = None
-    for fam in fams.values():
-        kmin, kmax, cnt = spans.get(id(fam), (0, 0, 0))
-        if cnt == 0:
-            continue
-        if fam.kind == "fanout_all":
-            # addr_step is 0 for fan-outs: a second instance rewrites the
-            # whole address vector
-            if cnt > 1:
-                blame(0, int(fam.addr_vec[0]))
-            if fam.dw > 0:
-                marks += fam.dw * (n - 1)
-            lo = int(fam.addr_vec.min())
-            hi = int(fam.addr_vec.max())
-            fan_lo = lo if fan_lo is None else min(fan_lo, lo)
-            fan_hi = hi if fan_hi is None else max(fan_hi, hi)
-            continue
-        step = int(fam.addr_step)
-        if step == 0 and cnt > 1:
-            blame(int(fam.dst[0]), int(fam.addr_rel[0]))
-        if fam.dw > 0:
-            marks += cnt * fam.dw * np.bincount(fam.dst, minlength=n)
-        a0 = fam.addr_rel + np.int64(step) * kmin
-        a1 = fam.addr_rel + np.int64(step) * kmax
-        dsts.append(fam.dst)
-        los.append(np.minimum(a0, a1))
-        his.append(np.maximum(a0, a1))
-        steps.append(
-            np.full(fam.m, abs(step) if cnt > 1 else 0, np.int64)
-        )
-
-    # ---- marker aliasing --------------------------------------------------
-    pbase = int(amap.partial_base)
-    if cfg.include_data_writes and marks.any():
-        wend = pbase + 64 * marks  # per-rank marker window end
-        if fan_lo is not None and fan_lo < int(wend.max()) \
-                and fan_hi >= pbase:
-            raise _unsupported(
-                "data-marker writes overlap the fan-out flag range "
-                f"({flagname(fan_hi)}); stale-flag visibility stays on the "
-                "timeline engine"
-            )
-        for d_a, lo_a, hi_a, st_a in zip(dsts, los, his, steps):
-            # first progression member >= partial_base, exact per message
-            s = np.maximum(st_a, 1)
-            first = lo_a + ((pbase - lo_a + s - 1) // s) * s
-            np.maximum(first, lo_a, out=first)
-            bad = (first <= hi_a) & (first < wend[d_a])
-            if bad.any():
-                j = int(np.flatnonzero(bad)[0])
-                raise _unsupported(
-                    f"data-marker writes on rank {int(d_a[j])} reach "
-                    f"{flagname(int(first[j]))}: the flag pool overruns the "
-                    "partial-tile region at this shape; stale-flag "
-                    "visibility stays on the timeline engine"
-                )
-
-    # ---- flag rewrites ----------------------------------------------------
-    if not dsts:
-        return
-    dst = np.concatenate(dsts)
-    lo = np.concatenate(los)
-    hi = np.concatenate(his)
-    st = np.concatenate(steps)
-    order = np.argsort(dst, kind="stable")
-    dst, lo, hi, st = dst[order], lo[order], hi[order], st[order]
-    # pairwise within each destination's run of rows (runs are short: one
-    # row per emission family)
-    runmax = int(np.bincount(dst).max())
-    for lag in range(1, runmax):
-        same = dst[:-lag] == dst[lag:]
-        inter = same & (lo[:-lag] <= hi[lag:]) & (lo[lag:] <= hi[:-lag])
-        if not inter.any():
-            continue
-        ii = np.flatnonzero(inter)
-        g = np.gcd(st[:-lag][ii], st[lag:][ii])
-        # g == 0: two single-point ranges that intersect, i.e. equal addrs
-        delta = lo[lag:][ii] - lo[:-lag][ii]
-        hit = (g == 0) | (delta % np.maximum(g, 1) == 0)
-        if hit.any():
-            j = int(ii[int(np.flatnonzero(hit)[0])])
-            blame(int(dst[j]), int(max(lo[j], lo[j + lag])))
+        raise _unsupported(f.message + tail)
 
 
 def _match_col(open_recs, want_addr, want_dst, n, cache):
@@ -1248,7 +1146,7 @@ def compile_tiered(cluster) -> _TieredPlan:
             "all-peers fan-out cannot share link ports with other "
             "emission stages"
         )
-    _check_flag_reuse(fams, recs, amap, cfg, n)
+    _check_flag_reuse(progs, amap, cfg)
     return _TieredPlan(
         ports, groups, instrs, np.array(refs, np.int64)
     )

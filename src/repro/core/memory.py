@@ -161,6 +161,18 @@ class AddressMap:
             return self.flag_base + 8 * idx
         return self.flag_base + self.flag_stride * idx
 
+    def flag_linear(self) -> Tuple[int, int]:
+        """``(base, unit)`` of the flag pool's linear address form.
+
+        ``flag_addr(src, slot) == base + unit * (slot * n_devices + src)``
+        for every in-range pair — the affine family the parametric layout
+        prover (:mod:`repro.analysis.layout`) reasons over without
+        enumerating slots.  ``unit`` is the per-flag pitch (8 bytes when
+        flags share a line, else ``flag_stride``).
+        """
+        unit = 8 if self.flags_share_line else self.flag_stride
+        return (self.flag_base, unit)
+
     def flag_region(self) -> Tuple[int, int]:
         n_flags = self.n_devices * self.flag_slots
         if self.flags_share_line:

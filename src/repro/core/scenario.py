@@ -31,6 +31,7 @@ from bisect import bisect_right
 from dataclasses import dataclass, fields
 from typing import (
     Callable,
+    ClassVar,
     Dict,
     Iterable,
     Iterator,
@@ -597,6 +598,16 @@ class Scenario(abc.ABC):
 
     name: str = ""
     closed_loop: bool = False  # instances flip this when built closed-loop
+    #: Class-level capability flag: True on scenarios that accept
+    #: ``closed_loop=True`` and run per-rank phase programs in a Cluster.
+    #: Registering such a class records a layout-proof obligation (see
+    #: ``LAYOUT_PROOF_OBLIGATIONS``) discharged by the parametric prover in
+    #: :mod:`repro.analysis.layout`.
+    closed_loop_capable: ClassVar[bool] = False
+    #: Device-count ceiling the layout prover certifies this scenario's
+    #: address layout up to (flag/partial/marker disjointness, unique
+    #: writers, wait coverage, for every constructible n <= max_devices).
+    max_devices: ClassVar[int] = 4096
 
     def __init__(self, cfg: SimConfig, amap: Optional[AddressMap] = None):
         self.cfg = cfg
@@ -616,7 +627,10 @@ class Scenario(abc.ABC):
 
     @classmethod
     def default_amap(cls, cfg: SimConfig) -> AddressMap:
-        return AddressMap(n_devices=cfg.n_devices)
+        # clearance is a no-op for the single-slot default map; it makes
+        # "partial region starts above the flag pool" a base-class invariant
+        # for any subclass that forgets to re-base a wider pool
+        return AddressMap(n_devices=cfg.n_devices).with_partial_clearance()
 
     def _setup_fabric(
         self,
@@ -714,6 +728,15 @@ class Scenario(abc.ABC):
 
 _REGISTRY: Dict[str, Type[Scenario]] = {}
 
+#: Registration-time layout-proof obligations.  Every closed-loop-capable
+#: scenario registered below must have its address layout *proven* — flag
+#: pool / partial region / marker windows pairwise disjoint, one writer per
+#: flag value epoch, every wait family fed by an earlier emission family —
+#: for all device counts up to its ``max_devices`` bound.  The obligation is
+#: discharged by :func:`repro.analysis.layout.prove_registry`, wired into
+#: ``python -m repro.analysis`` and CI's verify-scenarios job.
+LAYOUT_PROOF_OBLIGATIONS: List[str] = []
+
 
 def register_scenario(cls: Type[Scenario]) -> Type[Scenario]:
     """Class decorator: register a Scenario subclass under ``cls.name``."""
@@ -723,6 +746,8 @@ def register_scenario(cls: Type[Scenario]) -> Type[Scenario]:
     if existing is not None and existing is not cls:
         raise ValueError(f"scenario {cls.name!r} already registered")
     _REGISTRY[cls.name] = cls
+    if cls.closed_loop_capable and cls.name not in LAYOUT_PROOF_OBLIGATIONS:
+        LAYOUT_PROOF_OBLIGATIONS.append(cls.name)
     return cls
 
 

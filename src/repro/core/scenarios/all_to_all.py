@@ -50,6 +50,7 @@ class AllToAllScenario(Scenario):
     """MoE-dispatch-shaped all-to-all incast with per-peer arrival skew."""
 
     name = "all_to_all"
+    closed_loop_capable = True
 
     def __init__(
         self,

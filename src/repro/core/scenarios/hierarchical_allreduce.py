@@ -67,6 +67,7 @@ class HierarchicalAllReduceScenario(Scenario):
     """Intra-node reduce-scatter -> leader ring all-reduce -> broadcast."""
 
     name = "hierarchical_allreduce"
+    closed_loop_capable = True
 
     def __init__(
         self,
@@ -101,7 +102,13 @@ class HierarchicalAllReduceScenario(Scenario):
         self.leader_slot_base = dpn
         self.bcast_slot = dpn + 2 * (self.n_nodes - 1)
         if amap is None:
-            amap = AddressMap(n_devices=n, flag_slots=self.bcast_slot + 1)
+            # bcast_slot grows with the node count; past ~720 devices the
+            # pool would cross the default partial_base and data markers
+            # would alias high flag slots (layout prover finding) — re-base
+            # the partial region above the pool
+            amap = AddressMap(
+                n_devices=n, flag_slots=self.bcast_slot + 1
+            ).with_partial_clearance()
         super().__init__(cfg, amap)
         self.payload_bytes = int(payload_bytes)
         self.devices_per_node = devices_per_node

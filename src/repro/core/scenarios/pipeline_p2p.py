@@ -51,6 +51,7 @@ class PipelineP2PScenario(Scenario):
     """Pipeline stage: per-microbatch activation wait -> compute -> p2p send."""
 
     name = "pipeline_p2p"
+    closed_loop_capable = True
 
     def __init__(
         self,
@@ -113,8 +114,12 @@ class PipelineP2PScenario(Scenario):
     @classmethod
     def default_amap(cls, cfg: SimConfig) -> AddressMap:
         # worst case a caller re-instantiates with more microbatches on the
-        # same map; 64 slots cover the defaults with headroom
-        return AddressMap(n_devices=cfg.n_devices, flag_slots=64)
+        # same map; 64 slots cover the defaults with headroom.  At 4092+
+        # devices 64 slots overrun the default flag/partial gap (layout
+        # prover finding), so clear the partial region past the pool.
+        return AddressMap(
+            n_devices=cfg.n_devices, flag_slots=64
+        ).with_partial_clearance()
 
     # ------------------------------------------------------------------
 

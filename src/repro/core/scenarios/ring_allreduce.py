@@ -60,6 +60,7 @@ class RingAllReduceScenario(Scenario):
     """Chunked ring all-reduce; one wait/flag per ring step."""
 
     name = "ring_allreduce"
+    closed_loop_capable = True
 
     def __init__(
         self,

@@ -153,6 +153,14 @@ def main(argv=None) -> int:
                          "(deadlock cycles, unmatched sync, slot races, "
                          "fabric reachability) instead of simulating; exits "
                          "non-zero with the diagnosis on a broken program")
+    ap.add_argument("--prove-layout", action="store_true",
+                    help="run the parametric layout prover instead of "
+                         "simulating: certify flag/partial/marker "
+                         "disjointness, unique flag writers, and wait/emit "
+                         "ordering for ALL device counts up to the "
+                         "scenario's max_devices bound (or --devices when "
+                         "given); exits non-zero with the finding and the "
+                         "smallest failing device count on a broken layout")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the traffic sanitizer alongside the engines "
                          "(byte conservation, calendar monotonicity, "
@@ -260,6 +268,24 @@ def main(argv=None) -> int:
             raise SystemExit(f"error: {e}")
         print(verdict.render())
         return 0 if verdict.ok else 1
+
+    if args.prove_layout:
+        from repro.analysis import prove_layout
+
+        pl_params = dict(sc_params)
+        pl_params.pop("closed_loop", None)
+        try:
+            proof = prove_layout(
+                args.scenario,
+                devices_per_node=pl_params.pop("devices_per_node", None),
+                fabric=pl_params.pop("fabric", None),
+                max_devices=args.devices,
+                **pl_params,
+            )
+        except (NotImplementedError, TypeError, ValueError) as e:
+            raise SystemExit(f"error: {e}")
+        print(proof.render())
+        return 0 if proof.ok else 1
 
     if args.sanitize and args.detailed != "all":
         raise SystemExit(

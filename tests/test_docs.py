@@ -79,6 +79,18 @@ def test_architecture_md_tiered_lockstep_example_executes():
     exec(compile(tiered[0], "ARCHITECTURE.md:tiered_lockstep", "exec"), {})
 
 
+def test_architecture_md_layout_proving_example_executes():
+    # the layout-proving snippet: the shipped all_to_all layout carries a
+    # parametric certificate, and a deliberately mis-based 3-rank map is
+    # blamed with the smallest failing count; a failure here means the doc
+    # lies about the prover
+    with open(ARCH_MD) as f:
+        blocks = _python_blocks(f.read())
+    layout = [b for b in blocks if "prove_layout" in b]
+    assert len(layout) == 1, "expected exactly one layout-proving block"
+    exec(compile(layout[0], "ARCHITECTURE.md:layout_proving", "exec"), {})
+
+
 @pytest.mark.slow
 def test_architecture_md_pod_scale_example_executes():
     # the 1024-device timeline-engine snippet runs as written (tens of

@@ -1,0 +1,204 @@
+"""Parametric layout prover: seeded mutations must be blamed exactly.
+
+Each test injects one layout fault into a real scenario — a shrunk
+flag/partial gap (the legacy pre-clearance map), a duplicated emitter, an
+off-by-stride marker window — and asserts the prover names the exact slot,
+the writer pair, and (where violations grow monotonically with the flag
+pool) the smallest failing device count, all without expanding a single
+program.  The hypothesis property at the bottom closes the loop the other
+way: layouts the prover calls clean never trip the runtime traffic
+sanitizer.
+"""
+
+import dataclasses
+
+from repro.analysis import check_layout, prove_layout, verify_scenario
+from repro.core import EngineKind, SimConfig
+from repro.core.memory import AddressMap
+from repro.core.scenario import (
+    EmitOp,
+    PhaseSpec,
+    SymbolicProgram,
+    get_scenario,
+    simulate,
+)
+from repro.core.scenarios.all_to_all import AllToAllScenario
+from repro.core.scenarios.hierarchical_allreduce import (
+    HierarchicalAllReduceScenario,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _legacy_amap(n: int, dpn: int) -> AddressMap:
+    """The pre-clearance hierarchical map: flag pool sized for the stage
+    slots but partial_base left at the class default."""
+    nodes = n // dpn
+    return AddressMap(n_devices=n, flag_slots=dpn + 2 * (nodes - 1) + 1)
+
+
+class _LegacyHierarchical(HierarchicalAllReduceScenario):
+    """hierarchical_allreduce with the shrunk-gap (legacy) address map."""
+
+    def __init__(self, cfg, amap=None, **kw):
+        n = cfg.n_devices
+        dpn = kw.get("devices_per_node") or n
+        super().__init__(cfg, _legacy_amap(n, dpn), **kw)
+
+
+class _ShiftedHierarchical(HierarchicalAllReduceScenario):
+    """Off-by-one-stride marker window: partial_base re-based 64 bytes
+    below the proven clearance, so exactly one flag line can alias."""
+
+    def __init__(self, cfg, amap=None, **kw):
+        n = cfg.n_devices
+        dpn = kw.get("devices_per_node") or n
+        cleared = _legacy_amap(n, dpn).with_partial_clearance()
+        super().__init__(
+            cfg,
+            dataclasses.replace(
+                cleared, partial_base=cleared.partial_base - 64
+            ),
+            **kw,
+        )
+
+
+class _DuplicatedEmitter(AllToAllScenario):
+    """all_to_all with one extra emission of an already-written flag."""
+
+    def _symbolic_phases(self, rank, *, emit):
+        prog = super()._symbolic_phases(rank, emit=emit)
+        if not emit:
+            return prog
+        n = self.cfg.n_devices
+        dup = PhaseSpec(
+            "a2a_dispatch",
+            1,
+            emits=(EmitOp((rank + 1) % n, slot=0, payload_bytes=8),),
+        )
+        return SymbolicProgram(prog.segments + (dup,), group=prog.group)
+
+
+# ---------------------------------------------------------------------------
+# clean registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_layouts_proven_parametric():
+    # every shipped closed-loop scenario must carry a parametric certificate
+    # (not just probe checks) across the whole sweep
+    for name in ("ring_allreduce", "all_to_all", "hierarchical_allreduce",
+                 "pipeline_p2p"):
+        proof = prove_layout(name, devices_per_node=4, max_devices=1024)
+        assert proof.ok, proof.render()
+        assert proof.parametric, (name, proof.notes)
+        assert proof.checked_counts  # concrete anchors really ran
+
+
+def test_prover_bound_comes_from_scenario_class():
+    proof = prove_layout("ring_allreduce", devices_per_node=4)
+    assert proof.max_devices == get_scenario("ring_allreduce").max_devices
+
+
+# ---------------------------------------------------------------------------
+# seeded mutations
+# ---------------------------------------------------------------------------
+
+
+def test_shrunk_gap_blamed_with_smallest_failing_count():
+    # the legacy hierarchical map first aliases at n=724 (dpn=4): the prover
+    # must find that exact count from probe failures by bisection — not the
+    # probe count it happened to trip on — and name the first aliased slot
+    # and the marker/flag writer pair
+    proof = prove_layout(_LegacyHierarchical, devices_per_node=4,
+                         max_devices=4096)
+    assert not proof.ok
+    errors = [f for f in proof.findings if f.severity == "error"]
+    assert all(f.n_devices == 724 for f in errors), proof.render()
+    overlap = [f for f in errors if f.kind == "layout-overlap"]
+    assert overlap and overlap[0].slot == 361 and overlap[0].writers == (464,)
+    alias = [f for f in errors if f.kind == "marker-alias"]
+    assert alias, proof.render()
+    first = alias[0]
+    assert (first.dst, first.writers, first.slot) == (4, (0,), 362)
+    assert "flag (writer 0, slot 362)" in first.message
+
+
+def test_duplicated_emitter_names_both_sites():
+    proof = prove_layout(_DuplicatedEmitter, max_devices=256)
+    assert not proof.ok
+    reuse = [f for f in proof.findings
+             if f.severity == "error" and f.kind == "flag-reuse"]
+    assert reuse, proof.render()
+    first = reuse[0]
+    assert first.n_devices == 2  # smallest shape that can exhibit it
+    assert first.slot == 0
+    assert len(first.writers) == 2  # both emission instances named
+    assert "a2a_dispatch#" in first.message  # ...with their program sites
+
+
+def test_off_by_stride_marker_window_caught():
+    # 64 bytes below the proven clearance: the overrun only appears at
+    # counts where the pool end lands in the last line of a page, so the
+    # finding must carry a concrete count, the aliased slot, and the exact
+    # 64-byte overrun
+    proof = prove_layout(_ShiftedHierarchical, devices_per_node=4,
+                         max_devices=4096)
+    assert not proof.ok
+    errors = [f for f in proof.findings if f.severity == "error"]
+    assert errors, proof.render()
+    first = errors[0]
+    assert first.kind == "layout-overlap"
+    assert first.n_devices is not None and first.slot is not None
+    assert "by 64 bytes" in first.message
+
+
+def test_verify_scenario_carries_layout_findings():
+    # the concrete half of the prover rides along with the static verifier
+    # (and therefore the CLI --verify path) at the instance's exact shape
+    n, dpn = 512, 2
+    cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(n)
+    sc = _LegacyHierarchical(
+        cfg, devices_per_node=dpn, fabric="two_tier", closed_loop=True
+    )
+    assert any(f.severity == "error" for f in check_layout(sc))
+    verdict = verify_scenario(sc)
+    kinds = {f.kind for f in verdict.findings if f.severity == "error"}
+    assert "marker-alias" in kinds or "layout-overlap" in kinds
+    assert not verdict.ok
+
+
+# ---------------------------------------------------------------------------
+# prover-clean implies sanitizer-clean
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        name=st.sampled_from(
+            ["ring_allreduce", "all_to_all", "hierarchical_allreduce",
+             "pipeline_p2p"]
+        ),
+        dpn=st.sampled_from([2, 3, 4]),
+        nodes=st.integers(min_value=2, max_value=4),
+        fabric=st.sampled_from(["two_tier", "fat_tree", "rail_optimized"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_prover_clean_layouts_never_trip_sanitizer(
+        name, dpn, nodes, fabric
+    ):
+        n = dpn * nodes
+        cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(n)
+        sc = get_scenario(name)(
+            cfg, closed_loop=True, devices_per_node=dpn, fabric=fabric
+        )
+        assert not [f for f in check_layout(sc) if f.severity == "error"]
+        # a clean layout verdict must imply a clean shadowed run: the
+        # sanitizer raises on any exactly-once flag-delivery violation
+        report = simulate(sc, sanitize=True, collect_segments=False)
+        assert report.closed_loop

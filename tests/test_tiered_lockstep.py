@@ -96,20 +96,40 @@ def test_ring_flag_pool_clears_partial_region():
 
 
 def test_marker_alias_declines_with_blame():
-    # hierarchical_allreduce's legacy layout lets data-marker writes reach
-    # high flag slots at 256 nodes; the solver must refuse (the engines
-    # resolve waits by value, so a stale marker satisfies them early) and
-    # name the rank and flag, and the auto fallback must record the blame
+    # hierarchical_allreduce's *legacy* layout (no partial clearance) lets
+    # data-marker writes reach high flag slots at 256 nodes; the solver must
+    # refuse (the engines resolve waits by value, so a stale marker satisfies
+    # them early) and name the rank and flag.  The shipped default_amap
+    # re-bases partial_base above the pool, so the legacy map is rebuilt here
+    # explicitly: 512 devices, dpn=2 -> bcast_slot 512, a 16.8 MB pool that
+    # overruns the default 16.7 MB flag/partial gap
     import pytest
 
+    from repro.core.memory import AddressMap
+
+    legacy = AddressMap(n_devices=512, flag_slots=513)
+    assert legacy.flag_region()[1] > legacy.partial_base  # still aliases
     cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(512)
     with pytest.raises(ValueError, match=r"data-marker writes on rank \d+"
                                          r" reach flag \(writer \d+, slot"):
         simulate(
             "hierarchical_allreduce", cfg, devices=512, closed_loop=True,
             collect_segments=False, devices_per_node=2, fabric="two_tier",
-            lockstep=True,
+            lockstep=True, amap=legacy,
         )
+
+
+def test_hierarchical_pod_lockstep_engages():
+    # the clearance re-base is the whole point: the same 512-device shape
+    # that declines under the legacy map now engages the tiered solver and
+    # stays bit-identical to the cohort timeline
+    cfg = SimConfig(engine=EngineKind.EVENT, workgroups=4).with_devices(512)
+    kw = dict(devices=512, closed_loop=True, collect_segments=False,
+              devices_per_node=2, fabric="two_tier")
+    fast = simulate("hierarchical_allreduce", cfg, lockstep=True, **kw)
+    slow = simulate("hierarchical_allreduce", cfg, lockstep=False, **kw)
+    assert fast.meta["lockstep_reason"] == "engaged"
+    assert _sig(fast) == _sig(slow)
 
 
 def test_group_classification_roundtrips_expand():
